@@ -1,0 +1,131 @@
+"""Calibrate the vector-machine constants against the paper's Table 1.
+
+Free parameters: issue, beat_idx, miss_penalty, range_log_coef, scalar_cpi,
+beat_mem. Objective (log-space):
+  sum over matrices, algorithms of (log predicted_speedup - log paper_speedup)^2
+  + w_abs * sum over matrices of (log T_spa_pred - log T_spa_paper)^2
+The absolute term pins the overall cycle scale (the paper reports SPA seconds
+at 50 MHz); the speedup terms shape the relative constants.
+
+Run: PYTHONPATH=src python -m benchmarks.calibrate
+Writes the fitted constants to benchmarks/fitted_machine.json, which
+vm.machine picks up as DEFAULT_MACHINE when present.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import os
+
+import numpy as np
+
+from repro.sparse.suitesparse import SUITESPARSE_TABLE1, ALGO_COLUMNS
+from repro.vm.machine import Machine
+
+from benchmarks.common import PAPER_ALGOS, price, table1_traces
+
+FITTED_PATH = os.path.join(os.path.dirname(__file__), "fitted_machine.json")
+
+# parameter -> (min, max) search bounds, explored on a log grid
+BOUNDS = {
+    "issue": (1.0, 40.0),
+    "beat_mem": (0.25, 4.0),
+    "beat_idx": (1.0, 32.0),
+    "miss_penalty": (0.5, 40.0),
+    "range_log_coef": (0.0, 2.0),
+    "scalar_cpi": (0.5, 16.0),
+}
+
+
+def objective(mach: Machine, traces, w_abs: float = 0.5) -> float:
+    loss = 0.0
+    for spec in SUITESPARSE_TABLE1:
+        entry = traces[spec.name]
+        t_spa = price(entry["spa"], mach)
+        loss += w_abs * (np.log(t_spa) - np.log(spec.spa_seconds)) ** 2
+        for algo, paper_s in zip(PAPER_ALGOS, spec.paper_speedups):
+            pred_s = t_spa / price(entry[algo], mach)
+            loss += (np.log(pred_s) - np.log(paper_s)) ** 2
+    return loss
+
+
+def fit(traces, *, rounds: int = 6, grid: int = 9, verbose=True) -> Machine:
+    mach = Machine()
+    best = objective(mach, traces)
+    if verbose:
+        print(f"initial loss {best:.3f}")
+    for rnd in range(rounds):
+        improved = False
+        for param, (lo, hi) in BOUNDS.items():
+            cur = getattr(mach, param)
+            # local log-grid around current value, clipped to bounds
+            if cur <= 0:
+                cands = np.linspace(lo, max(hi * 0.25, lo + 1e-6), grid)
+            else:
+                cands = np.clip(cur * np.logspace(-0.6, 0.6, grid), lo, hi)
+            cands = np.unique(np.concatenate([cands, [cur]]))
+            for v in cands:
+                trial = mach.replace(**{param: float(v)})
+                l = objective(trial, traces)
+                if l < best - 1e-9:
+                    best, mach, improved = l, trial, True
+        if verbose:
+            print(f"round {rnd}: loss {best:.3f}  "
+                  + " ".join(f"{p}={getattr(mach, p):.3g}" for p in BOUNDS))
+        if not improved:
+            break
+    return mach
+
+
+def report(mach: Machine, traces):
+    print("\nmatrix-level check (pred vs paper speedups):")
+    header = "name".ljust(16) + " " + " ".join(a.rjust(13) for a in PAPER_ALGOS)
+    print(header)
+    errs = []
+    avg_pred = np.zeros(len(PAPER_ALGOS))
+    for spec in SUITESPARSE_TABLE1:
+        entry = traces[spec.name]
+        t_spa = price(entry["spa"], mach)
+        row = [spec.name.ljust(16)]
+        for ai, (algo, paper_s) in enumerate(
+                zip(PAPER_ALGOS, spec.paper_speedups)):
+            pred = t_spa / price(entry[algo], mach)
+            avg_pred[ai] += pred
+            errs.append(np.log(pred / paper_s))
+            row.append(f"{pred:5.2f}/{paper_s:4.2f}")
+        print(" ".join(row))
+    avg_pred /= len(SUITESPARSE_TABLE1)
+    from repro.sparse.suitesparse import TABLE1_AVERAGE_SPEEDUPS
+
+    print("\naverage speedups (pred vs paper):")
+    for a, p, q in zip(PAPER_ALGOS, avg_pred, TABLE1_AVERAGE_SPEEDUPS):
+        print(f"  {a:16s} {p:5.2f} vs {q:5.2f}")
+    errs = np.asarray(errs)
+    print(f"\ngeomean |rel err| = {np.exp(np.abs(errs).mean()) - 1:.1%}, "
+          f"rmse(log) = {np.sqrt((errs ** 2).mean()):.3f}")
+
+
+def save(mach: Machine):
+    with open(FITTED_PATH, "w") as f:
+        json.dump({p: getattr(mach, p) for p in BOUNDS}, f, indent=2)
+    print(f"saved {FITTED_PATH}")
+
+
+def load_fitted() -> Machine:
+    if os.path.exists(FITTED_PATH):
+        with open(FITTED_PATH) as f:
+            return Machine().replace(**json.load(f))
+    return Machine()
+
+
+def main():
+    print("building traces (cached after first run)...")
+    traces = table1_traces(verbose=True)
+    mach = fit(traces)
+    report(mach, traces)
+    save(mach)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Shared benchmark machinery: algorithm registry + disk-cached traces.
+
+Traces depend only on matrix structure and algorithm parameters — never on
+machine constants — so they are built once and re-priced instantly during
+calibration and sensitivity sweeps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+
+import numpy as np
+
+from repro.core.analysis import preprocess, Preprocess
+from repro.sparse.format import CSC
+from repro.sparse.suitesparse import SUITESPARSE_TABLE1, load_or_synthesize
+from repro.vm.schedule import (
+    c_column_nnz,
+    expanded_rows,
+    trace_esc,
+    trace_hash,
+    trace_hybrid,
+    trace_spa,
+    trace_spars,
+    trace_preprocess,
+)
+from repro.vm.trace import Trace
+
+CACHE = os.environ.get("REPRO_CACHE", ".cache")
+
+# paper Table 1 column order
+PAPER_ALGOS = (
+    "spars-16/64", "spars-40/40", "h-spa-16/64", "h-spa-40/40",
+    "hash-32/256", "hash-256/256", "h-hash-32/256", "h-hash-256/256", "esc",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    family: str          # spa | spars | hash | h-spa | h-hash | esc | hash-sota
+    t: float = np.inf
+    b_min: int = 256
+    b_max: int = 256
+    sort: bool = True
+
+
+def algo_spec(name: str) -> AlgoSpec:
+    if name == "spa":
+        return AlgoSpec("spa")
+    if name == "esc":
+        return AlgoSpec("esc")
+    if name == "hash-sota":
+        return AlgoSpec("hash-sota", b_min=256, b_max=256, sort=False)
+    fam, bounds = name.rsplit("-", 1)
+    b_min, b_max = (int(x) for x in bounds.split("/"))
+    t = 40.0 if fam.startswith("h-") else np.inf
+    return AlgoSpec(fam, t=t, b_min=b_min, b_max=b_max)
+
+
+def build_trace(a: CSC, b: CSC, name: str, *, t: float | None = None,
+                b_min: int | None = None, b_max: int | None = None) -> Trace:
+    """Trace for a named algorithm (overridable parameters for sweeps)."""
+    s = algo_spec(name)
+    if t is not None:
+        s = dataclasses.replace(s, t=t)
+    if b_min is not None:
+        s = dataclasses.replace(s, b_min=b_min)
+    if b_max is not None:
+        s = dataclasses.replace(s, b_max=b_max)
+
+    cn = c_column_nnz(a, b)
+    if s.family == "spa":
+        return trace_spa(a, b, c_nnz=cn)
+    if s.family == "esc":
+        return trace_esc(a, b)
+    if s.family == "hash-sota":
+        # prior work [31]: no sorting, fixed power-of-two table sized once
+        # from the global max column load
+        pre = preprocess(a, b, t=np.inf, b_min=s.b_min, b_max=s.b_max,
+                         sort=False)
+        from repro.core.analysis import hash_table_size
+
+        H = hash_table_size(int(pre.ops.max()))
+        pre = dataclasses.replace(
+            pre, hash_sizes=np.full(pre.blocks.n_blocks, H, np.int64))
+        return trace_hash(a, b, pre, c_nnz=cn)
+    pre = preprocess(a, b, t=s.t, b_min=s.b_min, b_max=s.b_max, sort=s.sort)
+    if s.family == "spars":
+        return trace_spars(a, b, pre, c_nnz=cn)
+    if s.family == "hash":
+        return trace_hash(a, b, pre, c_nnz=cn)
+    if s.family == "h-spa":
+        return trace_hybrid(a, b, pre, accumulator="spa", c_nnz=cn)
+    if s.family == "h-hash":
+        return trace_hybrid(a, b, pre, accumulator="hash", c_nnz=cn)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# trace pricing as arrays (fast repeated evaluation under different machines)
+# ---------------------------------------------------------------------------
+
+_KIND_IDS = {k: i for i, k in enumerate(
+    ("valu", "vfma", "vload", "vstore", "vload_idx", "vstore_idx", "scalar"))}
+
+
+def trace_arrays(t: Trace):
+    kinds, vls, wss, counts = [], [], [], []
+    for (kind, vl, ws), c in t.counts.items():
+        kinds.append(_KIND_IDS[kind])
+        vls.append(vl)
+        wss.append(ws)
+        counts.append(c)
+    return (np.asarray(kinds), np.asarray(vls, np.float64),
+            np.asarray(wss, np.float64), np.asarray(counts, np.float64))
+
+
+def price(arrays, mach) -> float:
+    """Vectorized Machine.cycles over trace arrays."""
+    kinds, vls, wss, counts = arrays
+    beats = np.array([mach.beat_alu, mach.beat_fma, mach.beat_mem,
+                      mach.beat_mem, mach.beat_idx, mach.beat_idx, 0.0])
+    groups = np.ceil(vls / mach.lanes)
+    is_idx = (kinds >= 4) & (kinds <= 5) & (wss > 0)
+    sub = np.zeros_like(wss)
+    np.log2(np.clip(np.minimum(wss, mach.l2_bytes) / mach.range_log_base,
+                    1.0, None), out=sub, where=is_idx)
+    resident = np.where(wss > 0, np.minimum(1.0, mach.l2_bytes /
+                                            np.maximum(wss, 1.0)), 1.0)
+    factor = np.where(
+        is_idx,
+        1.0 + mach.range_log_coef * sub + mach.miss_penalty * (1 - resident),
+        1.0)
+    per = mach.issue + groups * beats[kinds] * factor
+    per = np.where(kinds == 6, mach.scalar_cpi, per)
+    return float((per * counts).sum()) / mach.clock_hz
+
+
+# ---------------------------------------------------------------------------
+# cached Table-1 traces
+# ---------------------------------------------------------------------------
+
+
+def table1_traces(algos=("spa",) + PAPER_ALGOS, seed: int = 0, verbose=False):
+    """{matrix_name: {algo: trace_arrays}} for the 40 Table-1 matrices."""
+    os.makedirs(os.path.join(CACHE, "traces"), exist_ok=True)
+    out = {}
+    for spec in SUITESPARSE_TABLE1:
+        path = os.path.join(CACHE, "traces", f"{spec.name}_s{seed}.pkl")
+        entry = {}
+        if os.path.exists(path):
+            try:
+                with open(path, "rb") as f:
+                    entry = pickle.load(f)
+            except Exception:
+                entry = {}
+        missing = [x for x in algos if x not in entry]
+        if missing:
+            mat, _ = load_or_synthesize(
+                spec, seed=seed, cache_dir=os.path.join(CACHE, "matrices"))
+            for name in missing:
+                if verbose:
+                    print(f"  tracing {spec.name} / {name}", flush=True)
+                entry[name] = trace_arrays(build_trace(mat, mat, name))
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                pickle.dump(entry, f)
+            os.replace(tmp, path)
+        out[spec.name] = entry
+    return out

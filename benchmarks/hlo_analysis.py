@@ -1,0 +1,224 @@
+"""While-loop-aware analysis of optimized HLO.
+
+XLA's ``compiled.cost_analysis()`` counts a loop body once, which undercounts
+scanned-layer models by the layer count (verified on this backend — see
+EXPERIMENTS.md §Dry-run caveats). This walker parses the post-optimization
+HLO text and accumulates, per device,
+  * MXU flops (dot ops: 2 x numel(result) x contracted size, operand shapes
+    resolved through each computation's symbol table),
+  * collective bytes by op kind (result-shape bytes),
+  * dot operand+result bytes (an HBM-traffic lower bound),
+multiplying through nested while/fusion/call structure using the
+``known_trip_count`` backend_config XLA attaches to counted loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "pred": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_OP_RE = re.compile(
+    r"^((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+"
+                       r"\[[^\]]*\]))")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[":{]+n["\s:]+"?(\d+)')
+_CALLED = (
+    ("body", re.compile(r"body=%?([\w\.\-]+)")),
+    ("condition", re.compile(r"condition=%?([\w\.\-]+)")),
+    ("calls", re.compile(r"calls=%?([\w\.\-]+)")),
+    ("to_apply", re.compile(r"to_apply=%?([\w\.\-]+)")),
+)
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+
+
+def _shapes(type_str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _numel(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _nbytes(type_str):
+    return sum(_numel(s) * _DTYPE_BYTES[dt] for dt, s in _shapes(type_str))
+
+
+@dataclasses.dataclass
+class Comp:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_tpu: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    calls: list = dataclasses.field(default_factory=list)  # (name, mult)
+    max_constant: int = 0
+
+
+def _split_computations(text: str):
+    """Yield (comp_name, is_entry, [lines]) blocks."""
+    cur_name, cur_lines, is_entry = None, [], False
+    for line in text.splitlines():
+        s = line.rstrip()
+        if s.endswith("{") and not s.lstrip().startswith("//"):
+            head = s.strip()
+            if head.startswith("ENTRY") or (head.startswith("%")
+                                            and "(" in head):
+                if cur_name is not None:
+                    yield cur_name, is_entry, cur_lines
+                is_entry = head.startswith("ENTRY")
+                name_m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", head)
+                cur_name = name_m.group(1) if name_m else None
+                cur_lines = [head]
+                continue
+        if cur_name is not None:
+            cur_lines.append(s)
+            if s.strip() == "}":
+                yield cur_name, is_entry, cur_lines
+                cur_name, cur_lines = None, []
+    if cur_name is not None:
+        yield cur_name, is_entry, cur_lines
+
+
+def _parse_comp(lines) -> Comp:
+    c = Comp()
+    types: dict[str, str] = {}
+    for pm in _PARAM_RE.finditer(lines[0]):  # header params
+        types[pm.group(1)] = pm.group(2)
+    for line in lines[1:]:
+        s = line.strip()
+        dm = _DEF_RE.match(s)
+        if not dm:
+            continue
+        name, rhs = dm.group(1), dm.group(2)
+        for cst in _CONSTANT.findall(rhs):
+            c.max_constant = max(c.max_constant, int(cst))
+        om = _OP_RE.match(rhs)
+        if not om:
+            continue
+        result_type, op, args = om.groups()
+        types[name] = result_type
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES:
+            nb = _nbytes(result_type)
+            c.coll[base] += nb
+            # TPU-equivalent width: XLA:CPU legalizes bf16 matmuls to f32,
+            # so TP partial-sum collectives around dots measure 2x the bytes
+            # a TPU build would move. Count those at bf16 width.
+            if "f32[" in result_type and "dot_general" in rhs:
+                nb = nb / 2
+            c.coll_tpu[base] += nb
+        elif base == "dot":
+            operands = [a.strip().lstrip("%")
+                        for a in args.split(")")[0].split(",")[:2]]
+            lhs_type = types.get(operands[0], "")
+            rhs_type = types.get(operands[1], "") if len(operands) > 1 else ""
+            cm = _CONTRACT_RE.search(rhs)
+            lhs_shapes = _shapes(lhs_type)
+            if cm and lhs_shapes:
+                lhs_shape = lhs_shapes[0][1]
+                contract = 1
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(lhs_shape):
+                        contract *= lhs_shape[int(idx)]
+                numel = sum(_numel(sh) for _, sh in _shapes(result_type))
+                c.flops += 2.0 * numel * contract
+                c.dot_bytes += (_nbytes(result_type) + _nbytes(lhs_type)
+                                + _nbytes(rhs_type))
+        # call sites
+        trip = 1
+        tm = _TRIP_RE.search(rhs)
+        if tm:
+            trip = int(tm.group(1))
+        for kind, rx in _CALLED:
+            for called in rx.findall(rhs):
+                if kind == "body":
+                    c.calls.append((called, max(trip, 1)))
+                elif kind == "condition":
+                    c.calls.append((called, max(trip, 1) + 1))
+                else:
+                    c.calls.append((called, 1))
+        bm = _BRANCHES.search(rhs)
+        if bm:
+            for nm in bm.group(1).split(","):
+                c.calls.append((nm.strip().lstrip("%"), 1))
+    return c
+
+
+def analyze(text: str) -> dict:
+    comps: dict[str, Comp] = {}
+    entry = None
+    for name, is_entry, lines in _split_computations(text):
+        comps[name] = _parse_comp(lines)
+        if is_entry:
+            entry = name
+    memo: dict[str, tuple] = {}
+
+    def total(name, depth=0):
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 128:
+            z = {k: 0.0 for k in _COLLECTIVES}
+            return (0.0, 0.0, z, dict(z))
+        zero = {k: 0.0 for k in _COLLECTIVES}
+        memo[name] = (0.0, 0.0, dict(zero), dict(zero))
+        c = comps[name]
+        flops, dbytes = c.flops, c.dot_bytes
+        coll = dict(c.coll)
+        coll_t = dict(c.coll_tpu)
+        for called, mult in c.calls:
+            f2, d2, c2, ct2 = total(called, depth + 1)
+            flops += mult * f2
+            dbytes += mult * d2
+            for k in coll:
+                coll[k] += mult * c2[k]
+                coll_t[k] += mult * ct2[k]
+        memo[name] = (flops, dbytes, coll, coll_t)
+        return memo[name]
+
+    flops, dbytes, coll, coll_t = total(entry or "__missing__")
+    return {
+        "flops": flops,
+        "dot_bytes": dbytes,
+        "collective_bytes": coll,
+        "collective_total": sum(coll.values()),
+        "collective_bytes_tpu_equiv": coll_t,
+        "collective_total_tpu_equiv": sum(coll_t.values()),
+        "n_computations": len(comps),
+    }
+
+
+def analyze_file(path: str) -> dict:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        return analyze(f.read())
+
+
+if __name__ == "__main__":
+    import json
+    import sys
+
+    print(json.dumps(analyze_file(sys.argv[1]), indent=1))

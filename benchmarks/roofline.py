@@ -1,0 +1,149 @@
+"""E8 — roofline report: three terms per (arch x shape) from the dry-run.
+
+Sources per cell (single-pod, per assignment):
+  compute term    = HLO flops per device (loop-corrected walker over the
+                    optimized HLO; XLA cost_analysis counts loop bodies once)
+                    / 197 TFLOP/s
+  memory term     = max(HLO dot operand/result bytes, analytic weight+
+                    activation+cache traffic) / 819 GB/s
+  collective term = per-device collective result bytes (loop-corrected)
+                    / 50 GB/s/link
+
+Also reported: MODEL_FLOPS (6·N_active·D convention), the useful-compute
+ratio MODEL/HLO, the dominant term, and the roofline fraction
+(model-compute time / dominant-term time) — the §Perf score.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16] [--csv out]
+Writes .cache/roofline.json + prints a markdown table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.models.accounting import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, hbm_bytes_estimate, local_param_bytes,
+    model_flops, total_params, active_params)
+from repro.models.config import ALL_SHAPES
+
+from benchmarks.hlo_analysis import analyze_file
+
+CACHE = os.environ.get("REPRO_CACHE", ".cache")
+DRY = os.path.join(CACHE, "dryrun")
+
+_SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def analyze_cell(path: str) -> dict | None:
+    rec = json.load(open(path))
+    arch, shape_name, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    hlo_path = os.path.join(DRY, "hlo",
+                            f"{arch}__{shape_name}__{mesh}.txt.gz")
+    if not os.path.exists(hlo_path):
+        return None
+    cfg = get_config(arch)
+    shape = _SHAPES[shape_name]
+    n_dev = rec["n_devices"]
+    hlo = analyze_file(hlo_path)
+
+    mf = model_flops(cfg, shape)
+    accum = rec.get("accum_steps", 1)
+    dims = [int(x) for x in mesh.split("x")]
+    names = ("pod", "data", "model")[-len(dims):]
+    axis_sizes = dict(zip(names, dims))
+    w_local = local_param_bytes(
+        cfg, axis_sizes, mode="serve" if shape.kind == "decode" else "train")
+    mem_bytes = max(
+        hlo["dot_bytes"],
+        hbm_bytes_estimate(cfg, shape, n_dev, accum=accum, w_local=w_local))
+    coll_total = hlo.get("collective_total_tpu_equiv",
+                         hlo["collective_total"])
+    t_c = hlo["flops"] / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_x = coll_total / ICI_BW
+    t_max = max(t_c, t_m, t_x, 1e-12)
+    dominant = {t_c: "compute", t_m: "memory", t_x: "collective"}[t_max]
+    model_per_dev = mf["model_flops"] / n_dev
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh, "kind": rec["kind"],
+        "n_devices": n_dev,
+        "hlo_flops_dev": hlo["flops"],
+        "model_flops_dev": model_per_dev,
+        "useful_ratio": model_per_dev / max(hlo["flops"], 1.0),
+        "mem_bytes_dev": mem_bytes,
+        "coll_bytes_dev": coll_total,
+        "coll_bytes_dev_raw": hlo["collective_total"],
+        "coll_breakdown": hlo.get("collective_bytes_tpu_equiv",
+                                  hlo["collective_bytes"]),
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "dominant": dominant,
+        "roofline_fraction": (model_per_dev / PEAK_FLOPS) / t_max,
+        "compile_seconds": rec["compile_seconds"],
+        "memory_analysis": rec.get("memory", {}),
+        "total_params": total_params(cfg),
+        "active_params": active_params(cfg),
+    }
+    return out
+
+
+def suggestion(row) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        top = max(row["coll_breakdown"], key=row["coll_breakdown"].get)
+        return (f"cut {top} volume (sharding/overlap); "
+                f"{row['coll_breakdown'][top]/1e9:.1f} GB/dev dominates")
+    if d == "memory":
+        return "raise arithmetic intensity (fusion, larger microbatch, " \
+               "cache dtype)"
+    if row["useful_ratio"] < 0.5:
+        return (f"compute-bound but only {row['useful_ratio']:.0%} useful "
+                f"— reduce remat/padding waste")
+    return "near compute roofline — good"
+
+
+def run(mesh_filter: str = "16x16", write=True, csv=False):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        if "pipeline" in path:
+            continue
+        rec = json.load(open(path))
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        row = analyze_cell(path)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if write:
+        with open(os.path.join(CACHE, f"roofline_{mesh_filter}.json"),
+                  "w") as f:
+            json.dump(rows, f, indent=1)
+    hdr = (f"| arch | shape | t_comp(ms) | t_mem(ms) | t_coll(ms) | "
+           f"bottleneck | MODEL/HLO | roofline frac |")
+    print(hdr)
+    print("|" + "---|" * 8)
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f} | "
+              f"{r['t_memory_s']*1e3:.1f} | {r['t_collective_s']*1e3:.1f} | "
+              f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.2%} |")
+    if csv:
+        print("\narch,shape,t_compute,t_memory,t_collective,dominant,"
+              "useful_ratio,roofline_fraction")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['t_compute_s']:.6g},"
+                  f"{r['t_memory_s']:.6g},{r['t_collective_s']:.6g},"
+                  f"{r['dominant']},{r['useful_ratio']:.4f},"
+                  f"{r['roofline_fraction']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    run(args.mesh, csv=args.csv)

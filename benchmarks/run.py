@@ -1,0 +1,82 @@
+"""Benchmark entry point: one section per paper table/figure + kernel bench.
+
+PYTHONPATH=src python -m benchmarks.run [--only table1,fig34,fig5,kernels]
+Prints CSV per section. The dry-run/roofline harness is separate
+(repro.launch.dryrun / benchmarks.roofline) because it needs the 512-device
+XLA flag set before jax initializes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", type=str, default="",
+                   help="comma list: table1,fig34,fig5,kernels,wallclock")
+    args = p.parse_args()
+    only = set(x for x in args.only.split(",") if x)
+
+    def want(name):
+        return not only or name in only
+
+    t0 = time.time()
+    if want("table1"):
+        print("# === E4: Table 1 (40 matrices x 10 algorithms) ===")
+        from benchmarks import table1
+
+        table1.run()
+        print(f"# table1 done in {time.time()-t0:.0f}s\n", flush=True)
+    if want("fig34"):
+        print("# === E2/E3: Figures 3-4 (synthetic Z x b_max) ===")
+        from benchmarks import synthetic_sweep
+
+        synthetic_sweep.run()
+        print(f"# fig34 done in {time.time()-t0:.0f}s\n", flush=True)
+    if want("fig5"):
+        print("# === E5: Figure 5 (t / b_min / b_max sensitivity) ===")
+        from benchmarks import sensitivity
+
+        sensitivity.run()
+        print(f"# fig5 done in {time.time()-t0:.0f}s\n", flush=True)
+    if want("kernels"):
+        print("# === E6: Pallas kernel micro-bench (interpret wall-time + "
+              "structural) ===")
+        from benchmarks import kernel_bench
+
+        kernel_bench.run()
+        print(f"# kernels done in {time.time()-t0:.0f}s\n", flush=True)
+    if want("beyond"):
+        print("# === beyond-paper: work-stealing lock-step + auto-t ===")
+        from benchmarks import beyond
+
+        beyond.run()
+        print(f"# beyond done in {time.time()-t0:.0f}s\n", flush=True)
+    if want("roofline"):
+        import glob
+        import os
+
+        if glob.glob(os.path.join(
+                os.environ.get("REPRO_CACHE", ".cache"),
+                "dryrun", "*.json")):
+            print("# === E8: roofline (single-pod artifacts) ===")
+            from benchmarks import roofline
+
+            roofline.run("16x16", csv=True)
+            print(f"# roofline done in {time.time()-t0:.0f}s\n", flush=True)
+        else:
+            print("# roofline skipped (run repro.launch.dryrun --all first)")
+    if want("wallclock"):
+        print("# === host-executor wall-clock sanity (CPU, not the paper's "
+              "metric) ===")
+        from benchmarks import wallclock
+
+        wallclock.run()
+    print(f"# all benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

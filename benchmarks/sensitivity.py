@@ -1,0 +1,86 @@
+"""E5 — Figure 5: sensitivity of H-HASH(t) to t, b_min, b_max over the 40
+matrices. CSV: table,param,value,stat,speedup.
+
+Paper settings: (a) b=128/128, t in {20,30,40,50,60};
+(b) b_max=128, b_min in {32,64,96,128}, t=40;
+(c) b_min=128, b_max in {128,160,192,256}, t=40.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+
+import numpy as np
+
+from repro.sparse.suitesparse import SUITESPARSE_TABLE1, load_or_synthesize
+from repro.vm import c_column_nnz, trace_hybrid, trace_spa
+from repro.vm.machine import DEFAULT_MACHINE
+from repro.core.analysis import preprocess
+
+from benchmarks.common import CACHE, price, trace_arrays
+
+SWEEPS = (
+    ("t", [(t, 128, 128) for t in (20, 30, 40, 50, 60)]),
+    ("b_min", [(40, bmin, 128) for bmin in (32, 64, 96, 128)]),
+    ("b_max", [(40, 128, bmax) for bmax in (128, 160, 192, 256)]),
+)
+# paper's reported average speedups, same order as SWEEPS entries
+PAPER_MEANS = {
+    ("t", 20): 1.40, ("t", 30): 1.52, ("t", 40): 1.57, ("t", 50): 1.63,
+    ("t", 60): 1.62,
+    ("b_min", 32): 1.52, ("b_min", 64): 1.55, ("b_min", 96): 1.57,
+    ("b_min", 128): 1.58,
+    ("b_max", 128): 1.58, ("b_max", 160): 1.58, ("b_max", 192): 1.59,
+    ("b_max", 256): 1.61,
+}
+
+
+def _speedups(t, b_min, b_max):
+    """Speedup vs SPA for each of the 40 matrices, cached."""
+    mach = DEFAULT_MACHINE
+    path = os.path.join(CACHE, "traces",
+                        f"sens_t{t}_bmin{b_min}_bmax{b_max}.pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            pairs = pickle.load(f)
+    else:
+        pairs = {}
+        for spec in SUITESPARSE_TABLE1:
+            mat, _ = load_or_synthesize(
+                spec, seed=0, cache_dir=os.path.join(CACHE, "matrices"))
+            cn = c_column_nnz(mat, mat)
+            pre = preprocess(mat, mat, t=float(t), b_min=b_min, b_max=b_max)
+            pairs[spec.name] = (
+                trace_arrays(trace_spa(mat, mat, c_nnz=cn)),
+                trace_arrays(trace_hybrid(mat, mat, pre, accumulator="hash",
+                                          c_nnz=cn)),
+            )
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path + ".tmp", "wb") as f:
+            pickle.dump(pairs, f)
+        os.replace(path + ".tmp", path)
+    return np.array([price(s, mach) / price(h, mach)
+                     for s, h in pairs.values()])
+
+
+def run(csv=True):
+    out = []
+    for param, settings in SWEEPS:
+        for (t, b_min, b_max) in settings:
+            value = dict(t=t, b_min=b_min, b_max=b_max)[param]
+            sp = _speedups(t, b_min, b_max)
+            paper = PAPER_MEANS.get((param, value), float("nan"))
+            out.append((param, value, float(sp.mean()),
+                        float(np.median(sp)), float(sp.min()),
+                        float(sp.max()), paper))
+    if csv:
+        print("table,param,value,mean,median,min,max,paper_mean")
+        for r in out:
+            print(f"fig5,{r[0]},{r[1]},{r[2]:.4g},{r[3]:.4g},{r[4]:.4g},"
+                  f"{r[5]:.4g},{r[6]:.4g}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

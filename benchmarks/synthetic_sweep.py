@@ -1,0 +1,54 @@
+"""E2/E3 — Figures 3 and 4: synthetic matrices (n=2560, Z nnz/col), execution
+time of SPA vs SPARS (Fig 3) and SPA vs HASH (Fig 4) across b_max.
+
+CSV: table,Z,b_max,algo,seconds.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import preprocess
+from repro.sparse import random_uniform_csc
+from repro.vm import c_column_nnz, trace_hash, trace_spa, trace_spars
+from repro.vm.machine import DEFAULT_MACHINE
+
+N = 2560
+ZS = (2, 4, 5, 6, 8, 10)
+BMAXES = (8, 16, 24, 32, 40, 64, 96, 128, 192, 256)
+
+
+def run(csv=True):
+    mach = DEFAULT_MACHINE
+    out = []
+    for z in ZS:
+        a = random_uniform_csc(N, z, seed=z)
+        cn = c_column_nnz(a, a)
+        t_spa = mach.seconds(trace_spa(a, a, c_nnz=cn))
+        out.append(("fig3", z, 0, "spa", t_spa))
+        out.append(("fig4", z, 0, "spa", t_spa))
+        for bmax in BMAXES:
+            pre = preprocess(a, a, t=np.inf, b_min=bmax, b_max=bmax)
+            out.append(("fig3", z, bmax, "spars",
+                        mach.seconds(trace_spars(a, a, pre, c_nnz=cn))))
+            out.append(("fig4", z, bmax, "hash",
+                        mach.seconds(trace_hash(a, a, pre, c_nnz=cn))))
+    if csv:
+        print("table,Z,b_max,algo,seconds")
+        for r in out:
+            print(f"{r[0]},{r[1]},{r[2]},{r[3]},{r[4]:.6g}")
+        # headline crossovers (Section 5.2)
+        for z in ZS:
+            spa = next(r[4] for r in out if r[0] == "fig3" and r[1] == z
+                       and r[3] == "spa")
+            sp40 = next(r[4] for r in out if r[0] == "fig3" and r[1] == z
+                        and r[2] == 40)
+            h256 = next(r[4] for r in out if r[0] == "fig4" and r[1] == z
+                        and r[2] == 256)
+            print(f"fig34_summary,{z},,spars40_speedup,{spa/sp40:.3f}")
+            print(f"fig34_summary,{z},,hash256_speedup,{spa/h256:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Host-executor wall-clock sanity check (CPU numpy path).
+
+Not the paper's metric (that's the vm cost model); this guards against
+pathological regressions in the host executors and shows the expand-based
+vectorized executor as a practical CPU baseline.
+CSV: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import spgemm
+from repro.sparse.suitesparse import load_or_synthesize
+
+MATS = ("poli", "bcspwr09", "saylr4")
+METHODS = ("expand", "spa", "spars-40/40", "hash-256/256", "h-hash-256/256")
+
+
+def run(csv=True):
+    rows = []
+    for name in MATS:
+        mat, _ = load_or_synthesize(name, seed=0)
+        for method in METHODS:
+            t0 = time.perf_counter()
+            c = spgemm(mat, mat, method=method)
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append((f"host_{method}_{name}", dt, f"c_nnz={c.nnz}"))
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

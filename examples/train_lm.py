@@ -1,0 +1,77 @@
+"""End-to-end training driver (E12): qwen2-family reduced model on the
+synthetic learnable stream, with checkpointing + auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~15M, quick
+    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300
+
+The 100m preset is the assignment's "~100M model for a few hundred steps";
+on this 1-core CPU container expect minutes/step — the quick preset exercises
+the identical code path at laptop scale. Checkpoints land in
+.cache/train_lm/<size>; rerunning resumes automatically.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import ARCHS
+from repro.models import smoke
+from repro.training import (
+    AdamWConfig, DataConfig, SyntheticLoader, TrainConfig, Trainer,
+    init_train_state,
+)
+
+PRESETS = {
+    # name: (d_model, n_layers, n_heads, n_kv, d_head, d_ff, vocab, seq, batch)
+    "15m": (256, 4, 4, 2, 64, 1024, 4096, 128, 8),
+    "100m": (640, 10, 10, 2, 64, 2560, 16384, 256, 8),
+}
+
+
+def build_cfg(size: str):
+    d, l, h, kv, dh, ff, v, seq, batch = PRESETS[size]
+    base = smoke(ARCHS["qwen2-0.5b"])
+    cfg = dataclasses.replace(
+        base, n_layers=l, d_model=d, n_heads=h, n_kv_heads=kv, d_head=dh,
+        d_ff=ff, vocab=v, attn_q_chunk=seq, attn_kv_chunk=seq,
+        logits_chunk=min(seq, 128))
+    return cfg, seq, batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=sorted(PRESETS), default="15m")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    cfg, seq, batch = build_cfg(args.size)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: __import__("repro.models", fromlist=["x"])
+                       .init_model(cfg, jax.random.PRNGKey(0)))))
+    print(f"model: {args.size} ({n_params/1e6:.1f}M params), "
+          f"seq={seq} batch={batch}")
+
+    tc = TrainConfig(
+        total_steps=args.steps, peak_lr=args.lr, warmup_steps=args.steps // 10,
+        checkpoint_dir=f".cache/train_lm/{args.size}", checkpoint_every=20,
+        log_every=5, opt=AdamWConfig(quantize_moments=True))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=seq, global_batch=batch,
+                      seed=0, noise=0.05)
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    trainer = Trainer(cfg, tc, SyntheticLoader(dcfg), state)
+    trainer.install_preemption_handler()
+    trainer.try_resume()
+    log = trainer.run()
+    if log:
+        first = sum(m["loss"] for m in log[:3]) / max(len(log[:3]), 1)
+        last = sum(m["loss"] for m in log[-3:]) / max(len(log[-3:]), 1)
+        print(f"\nloss {first:.3f} -> {last:.3f} over {len(log)} steps "
+              f"({'DECREASED' if last < first else 'no decrease yet'})")
+    trainer.checkpoint()
+    print("checkpoint saved; rerun to resume")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Architecture registry: the ten assigned configs (--arch <id>)."""
+
+from repro.configs.zamba2_2p7b import CONFIG as ZAMBA2
+from repro.configs.granite_20b import CONFIG as GRANITE
+from repro.configs.yi_34b import CONFIG as YI
+from repro.configs.deepseek_coder_33b import CONFIG as DEEPSEEK
+from repro.configs.qwen2_0p5b import CONFIG as QWEN2
+from repro.configs.llama_3p2_vision_90b import CONFIG as LLAMA_VISION
+from repro.configs.llama4_maverick_400b import CONFIG as LLAMA4
+from repro.configs.qwen3_moe_30b import CONFIG as QWEN3
+from repro.configs.seamless_m4t_large import CONFIG as SEAMLESS
+from repro.configs.falcon_mamba_7b import CONFIG as FALCON_MAMBA
+
+ARCHS = {c.name: c for c in (
+    ZAMBA2, GRANITE, YI, DEEPSEEK, QWEN2, LLAMA_VISION, LLAMA4, QWEN3,
+    SEAMLESS, FALCON_MAMBA)}
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; one of {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,49 @@
+"""Core: the paper's SpGEMM algorithms and pre-processing analysis."""
+
+from repro.core.analysis import (
+    VL_MAX,
+    N_LANES,
+    HASH_C,
+    BlockSchedule,
+    Preprocess,
+    blocking_schedule,
+    hash_table_size,
+    hybrid_split,
+    preprocess,
+    sort_columns,
+)
+from repro.core.expand import expand_products, product_col_ptr, spgemm_expand
+from repro.core.naive import (
+    esc_numpy,
+    hash_numpy,
+    hybrid_numpy,
+    spa_numpy,
+    spars_numpy,
+)
+from repro.core.reference import dense_product, spgemm_dense
+from repro.core.api import spgemm, ALGORITHMS
+
+__all__ = [
+    "VL_MAX",
+    "N_LANES",
+    "HASH_C",
+    "BlockSchedule",
+    "Preprocess",
+    "blocking_schedule",
+    "hash_table_size",
+    "hybrid_split",
+    "preprocess",
+    "sort_columns",
+    "expand_products",
+    "product_col_ptr",
+    "spgemm_expand",
+    "esc_numpy",
+    "hash_numpy",
+    "hybrid_numpy",
+    "spa_numpy",
+    "spars_numpy",
+    "dense_product",
+    "spgemm_dense",
+    "spgemm",
+    "ALGORITHMS",
+]

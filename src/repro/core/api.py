@@ -1,0 +1,83 @@
+"""Public SpGEMM API: ``spgemm(A, B, method=...)``.
+
+Methods mirror the paper's evaluated algorithms. ``backend="host"`` runs the
+faithful numpy executors; ``backend="pallas"`` runs the TPU kernels (interpret
+mode on CPU). Default parameters are the paper's best settings.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import naive
+from repro.core.analysis import preprocess
+from repro.core.expand import spgemm_expand
+from repro.sparse.format import CSC
+
+# method -> (callable kwargs); paper's Section 5.3 configurations
+ALGORITHMS = {
+    "spa": {},
+    "spars-16/64": dict(b_min=16, b_max=64),
+    "spars-40/40": dict(b_min=40, b_max=40),
+    "h-spa-16/64": dict(t=40, b_min=16, b_max=64, accumulator="spa"),
+    "h-spa-40/40": dict(t=40, b_min=40, b_max=40, accumulator="spa"),
+    "hash-32/256": dict(b_min=32, b_max=256),
+    "hash-256/256": dict(b_min=256, b_max=256),
+    "h-hash-32/256": dict(t=40, b_min=32, b_max=256, accumulator="hash"),
+    "h-hash-256/256": dict(t=40, b_min=256, b_max=256, accumulator="hash"),
+    "esc": {},
+    "expand": {},  # fast vectorized host executor (not a paper algorithm)
+}
+
+
+def spgemm(
+    a: CSC,
+    b: CSC,
+    method: str = "h-hash-256/256",
+    *,
+    backend: str = "host",
+    t: float | None = None,
+    b_min: int | None = None,
+    b_max: int | None = None,
+) -> CSC:
+    """Compute C = A @ B with one of the paper's algorithms.
+
+    Overriding t/b_min/b_max customizes the named method's defaults.
+    """
+    if method not in ALGORITHMS:
+        raise ValueError(f"unknown method {method!r}; one of {list(ALGORITHMS)}")
+    params = dict(ALGORITHMS[method])
+    if t is not None:
+        params["t"] = t
+    if b_min is not None:
+        params["b_min"] = b_min
+    if b_max is not None:
+        params["b_max"] = b_max
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.spgemm_pallas(a, b, method=method, **params)
+    if backend != "host":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    if method == "spa":
+        return naive.spa_numpy(a, b)
+    if method == "expand":
+        return spgemm_expand(a, b)
+    if method == "esc":
+        return naive.esc_numpy(a, b)
+    if method.startswith("spars"):
+        pre = preprocess(a, b, t=np.inf, b_min=params["b_min"],
+                         b_max=params["b_max"])
+        return naive.spars_numpy(a, b, pre)
+    if method.startswith("hash"):
+        pre = preprocess(a, b, t=np.inf, b_min=params["b_min"],
+                         b_max=params["b_max"])
+        return naive.hash_numpy(a, b, pre)
+    if method.startswith("h-"):
+        return naive.hybrid_numpy(
+            a, b, t=params["t"], b_min=params["b_min"], b_max=params["b_max"],
+            accumulator=params["accumulator"],
+        )
+    raise AssertionError(method)

@@ -1,0 +1,18 @@
+"""Dense oracle for SpGEMM — the ground truth every algorithm is tested against."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparse.format import CSC, csc_from_dense, csc_to_dense
+
+
+def spgemm_dense(a: CSC, b: CSC, tol: float = 0.0) -> CSC:
+    """C = A @ B by densification. O(m*n*k) — tests and small inputs only."""
+    da = csc_to_dense(a)
+    db = csc_to_dense(b)
+    return csc_from_dense(da @ db, tol=tol)
+
+
+def dense_product(a: CSC, b: CSC) -> np.ndarray:
+    return csc_to_dense(a) @ csc_to_dense(b)

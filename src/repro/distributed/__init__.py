@@ -1,0 +1,17 @@
+"""Distribution layer: sharding rules, compression, pipeline."""
+
+from repro.distributed.sharding import (
+    batch_spec, cache_specs, dp_axes, mesh_axis_sizes, param_sharding,
+    sharding_rules,
+)
+from repro.distributed.compression import (
+    dequantize_tree, ef_compress, psum_compressed, quantize_tree,
+)
+from repro.distributed.pipeline import pipelined_apply, pipeline_forward
+
+__all__ = [
+    "batch_spec", "cache_specs", "dp_axes", "mesh_axis_sizes",
+    "param_sharding", "sharding_rules", "dequantize_tree", "ef_compress",
+    "psum_compressed", "quantize_tree", "pipelined_apply",
+    "pipeline_forward",
+]

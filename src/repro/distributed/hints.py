@@ -1,0 +1,89 @@
+"""Activation-sharding hints: with_sharding_constraint with graceful fallback.
+
+GSPMD propagates parameter shardings well, but on models whose head counts
+don't divide the TP axis it falls back to contraction-dim sharding inside
+attention (all-reducing score tensors every step) and can drop the batch
+sharding of the residual stream entirely — both observed in the baseline
+dry-runs (EXPERIMENTS.md §Perf, iteration 1). These hints pin the sharding of
+the residual stream, attention heads, and MoE dispatch buffers wherever the
+dimensions divide; on a 1-device mesh (tests, examples) they are no-ops.
+
+Dim vocabulary: 'dp' (batch over pod+data), 'model', 'kv_or_seq', None.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def current_mesh():
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def _dp_part(mesh, size):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for k in range(len(dp), 0, -1):
+        prod = 1
+        for a in dp[:k]:
+            prod *= sizes[a]
+        if size % prod == 0 and prod > 1:
+            return dp[:k] if k > 1 else dp[0]
+    return None
+
+
+def _manual_axes() -> bool:
+    """True when tracing inside shard_map (Manual mesh axes): constraints
+    are illegal there — the caller already owns the layout."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return (not am.empty) and any(
+            "Manual" in str(t) for t in am.axis_types)
+    except Exception:
+        return False
+
+
+def hint(x, *dims):
+    """Constrain x's sharding; silently no-op without an active mesh."""
+    mesh = current_mesh()
+    if mesh is None or mesh.devices.size == 1 or _manual_axes():
+        return x
+    if len(dims) != x.ndim:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    parts = []
+    used_model = False
+    for size, d in zip(x.shape, dims):
+        if d == "dp":
+            parts.append(_dp_part(mesh, size))
+        elif d == "model" and not used_model and model > 1 \
+                and size % model == 0:
+            parts.append("model")
+            used_model = True
+        else:
+            parts.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def hint_heads(x, *, batch_dim=0, head_dims=(2, 3)):
+    """Attention tensors [B, S, Hkv, (G,) Dh]: shard the first head-ish dim
+    that divides the model axis; otherwise leave heads unsharded (batch-DP
+    attention — the non-divisible-head fallback, DESIGN.md §5)."""
+    mesh = current_mesh()
+    if mesh is None or mesh.devices.size == 1 or _manual_axes():
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = sizes.get("model", 1)
+    parts = [None] * x.ndim
+    parts[batch_dim] = _dp_part(mesh, x.shape[batch_dim])
+    if model > 1:
+        for hd in head_dims:
+            if hd < x.ndim - 1 and x.shape[hd] % model == 0:
+                parts[hd] = "model"
+                break
+    return jax.lax.with_sharding_constraint(x, P(*parts))

@@ -1,0 +1,118 @@
+"""Sharding rules: logical parameter/activation axes -> mesh axes.
+
+One rule set serves all ten architectures (DESIGN.md §5):
+  * TP over 'model'  — heads (fused q/kv dims), d_ff, experts, vocab, d_inner
+  * FSDP over 'data' (+ 'pod' when present) — the d_model ('embed') axis of
+    every weight, so parameters + optimizer state are fully sharded (ZeRO-3);
+    GSPMD inserts the all-gathers at use sites
+  * DP over ('pod','data') — the batch dim of every activation/input
+Divisibility fallbacks are applied per-tensor in params.partition_specs.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Axes carrying data parallelism (pod is DP unless pipelining)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sharding_rules(mesh: Mesh, mode: str = "train") -> dict:
+    """mode="train": ZeRO-3 (params+optimizer FSDP over dp) x TP.
+    mode="serve": params replicated over dp, TP only — decode reads every
+    weight once per token, so per-token FSDP all-gathers would dominate the
+    step (§Perf iteration 4); replication costs params_bytes/TP per chip."""
+    dp = dp_axes(mesh)
+    return {
+        "__sizes__": mesh_axis_sizes(mesh),
+        # parameters
+        "embed": dp if mode == "train" else None,  # FSDP on d_model (train)
+        "vocab": "model",
+        "mlp": "model",
+        "heads": "model",         # fused (n_heads * d_head) projection dim
+        # EP: train shards experts over TP; serving shards them over DP so
+        # per-chip expert bytes stay bounded with replicated dense weights
+        "experts": "model" if mode == "train" else tuple(dp),
+        "ssm_inner": "model",
+        "layers": None,           # scan axis never sharded
+        None: None,
+    }
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """[B, ...] activations/inputs: shard B over the DP axes that divide it."""
+    dp = dp_axes(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    chosen = None
+    for k in range(len(dp), 0, -1):
+        prod = 1
+        for a in dp[:k]:
+            prod *= sizes[a]
+        if batch % prod == 0:
+            chosen = dp[:k]
+            break
+    lead = chosen if chosen is None or len(chosen) > 1 else chosen[0]
+    return P(lead, *([None] * extra_dims))
+
+
+def param_sharding(table_specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), table_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_specs(cfg, cache_abstract, mesh: Mesh):
+    """Serve-cache sharding, leaf-by-leaf (DESIGN.md §5).
+
+    KV caches [rep, B, S, Hkv, Dh]: B over DP when divisible; heads over
+    'model' when divisible, else the sequence dim (context-parallel cache).
+    SSM states: d_inner over 'model'. Cross-memory caches like KV.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    dp = dp_axes(mesh)
+    model = sizes.get("model", 1)
+
+    def dp_for(b):
+        for k in range(len(dp), 0, -1):
+            prod = 1
+            for a in dp[:k]:
+                prod *= sizes[a]
+            if b % prod == 0:
+                return dp[:k] if k > 1 else dp[0]
+        return None
+
+    def leaf_spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        if name in ("k", "v", "xk", "xv"):      # [rep, B, S, H, Dh]
+            _, b, s, h, _ = shape
+            bspec = dp_for(b)
+            if h % model == 0 and h >= model:
+                return P(None, bspec, None, "model", None)
+            if s % model == 0:
+                return P(None, bspec, "model", None, None)
+            return P(None, bspec, None, None, None)
+        if name == "conv":                       # [rep, B, K-1, d_inner]
+            din = shape[-1]
+            return P(None, dp_for(shape[1]), None,
+                     "model" if din % model == 0 else None)
+        if name == "h":                          # mamba state
+            if len(shape) == 4:                  # [rep, B, din, ds]
+                din = shape[2]
+                return P(None, dp_for(shape[1]),
+                         "model" if din % model == 0 else None, None)
+            # [rep, B, nh, hd, ds]
+            nh = shape[2]
+            return P(None, dp_for(shape[1]),
+                     "model" if nh % model == 0 else None, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_abstract)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+All kernels operate on *padded-column* sparse operands (rectangular views of
+CSC produced by ``sparse.csc_to_padded_columns``): for a matrix M,
+``rows [n_cols, Z]``, ``vals [n_cols, Z]``, ``nnz [n_cols]``, padding slots
+masked by ``z >= nnz[col]``. Oracles are vectorized jnp (grad-compatible where
+meaningful) and are what the kernel sweeps assert against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spgemm_padded_ref(
+    a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, m: int
+) -> jax.Array:
+    """Dense C [m, n_b] for C = A @ B with both operands padded-column."""
+    n_b, zb = b_rows.shape
+    n_a, za = a_rows.shape
+    k = b_rows  # [n_b, zb] -> A column index per B element
+    ar = a_rows[k]                       # [n_b, zb, za]
+    av = a_vals[k]                       # [n_b, zb, za]
+    an = a_nnz[k]                        # [n_b, zb]
+    bmask = jnp.arange(zb)[None, :] < b_nnz[:, None]           # [n_b, zb]
+    amask = jnp.arange(za)[None, None, :] < an[..., None]      # [n_b, zb, za]
+    prod = av * b_vals[..., None] * bmask[..., None] * amask
+    cols = jnp.broadcast_to(
+        jnp.arange(n_b)[:, None, None], prod.shape
+    ).reshape(-1)
+    rows = ar.reshape(-1)
+    c = jnp.zeros((m, n_b), prod.dtype)
+    return c.at[rows, cols].add(prod.reshape(-1))
+
+
+def spars_ref(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, m: int):
+    """SPARS computes the same C; flags mark structurally-touched cells."""
+    c = spgemm_padded_ref(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, m)
+    n_b, zb = b_rows.shape
+    n_a, za = a_rows.shape
+    k = b_rows
+    ar = a_rows[k]
+    an = a_nnz[k]
+    bmask = jnp.arange(zb)[None, :] < b_nnz[:, None]
+    amask = jnp.arange(za)[None, None, :] < an[..., None]
+    touched = (bmask[..., None] & amask).astype(jnp.float32)
+    cols = jnp.broadcast_to(
+        jnp.arange(n_b)[:, None, None], touched.shape
+    ).reshape(-1)
+    flags = jnp.zeros((m, n_b), jnp.float32)
+    flags = flags.at[ar.reshape(-1), cols].add(touched.reshape(-1))
+    return c, (flags > 0).astype(jnp.float32)
+
+
+def hash_tables_to_dense(table_keys, table_vals, m: int) -> jax.Array:
+    """Reconstruct dense columns [m, L] from per-lane hash tables [H, L]."""
+    h, l = table_keys.shape
+    valid = table_keys >= 0
+    rows = jnp.where(valid, table_keys, 0).reshape(-1)
+    cols = jnp.broadcast_to(jnp.arange(l)[None, :], (h, l)).reshape(-1)
+    vals = jnp.where(valid, table_vals, 0.0).reshape(-1)
+    return jnp.zeros((m, l), table_vals.dtype).at[rows, cols].add(vals)
+
+
+def bsr_spmm_ref(block_idx, block_nnz, blocks, x) -> jax.Array:
+    """Block-sparse (padded BSR) @ dense.
+
+    block_idx [n_rb, max_nb] : block-column index of each stored block
+    block_nnz [n_rb]         : valid blocks per block-row
+    blocks [n_rb, max_nb, bm, bk]
+    x [K, N] with K = n_cb * bk
+    returns [n_rb * bm, N]
+    """
+    n_rb, max_nb, bm, bk = blocks.shape
+    k_dim, n = x.shape
+    xb = x.reshape(k_dim // bk, bk, n)
+    gathered = xb[block_idx]            # [n_rb, max_nb, bk, N]
+    mask = (jnp.arange(max_nb)[None, :] < block_nnz[:, None])
+    prod = jnp.einsum("rnik,rnkj->rij", blocks * mask[..., None, None],
+                      gathered)
+    return prod.reshape(n_rb * bm, n)

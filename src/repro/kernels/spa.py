@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: SPA SpGEMM over a block of C columns.
+
+TPU adaptation of Algorithm 2 (see DESIGN.md §2): the SParse Accumulator for a
+block of ``L`` C columns is a dense ``[m, L]`` tile resident in VMEM for the
+whole kernel instance (the paper's accumulator-locality insight transplanted
+from L2 to VMEM). Per B non-zero we
+  * gather the referenced A column through a one-hot MXU matmul
+    (the TPU-idiomatic indexed vector load), and
+  * scatter-accumulate via an ``[m, L]`` one-hot mask FMA
+    (the TPU-idiomatic indexed vector store — races impossible because row
+    indices within one A column are unique, exactly the paper's argument).
+
+Operands are padded-column views (``sparse.csc_to_padded_columns``). Output is
+the dense accumulator block; compaction to CSC is the caller's separate store
+phase (``ops.dense_to_csc``), mirroring the paper's line-11 "store as sparse".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spa_kernel(b_rows_ref, b_vals_ref, b_nnz_ref,
+                a_rows_ref, a_vals_ref, a_nnz_ref,
+                out_ref, *, m: int, za: int, n_a: int):
+    L, zb = b_rows_ref.shape
+    a_rows = a_rows_ref[...]
+    a_vals = a_vals_ref[...]
+    a_nnz = a_nnz_ref[...]
+    b_nnz = b_nnz_ref[...]
+    iota_na = jax.lax.broadcasted_iota(jnp.int32, (L, n_a), 1)
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (m, L), 0)
+
+    def b_step(e, acc):
+        k = b_rows_ref[:, e]                       # [L] A-column ids
+        bv = b_vals_ref[:, e]                      # [L]
+        bmask = (e < b_nnz).astype(acc.dtype)      # [L]
+        # indexed vector load of the A columns: one-hot [L, n_a] @ table (MXU)
+        oh = (k[:, None] == iota_na).astype(acc.dtype)
+        ar = jnp.round(oh @ a_rows.astype(acc.dtype)).astype(jnp.int32)
+        av = oh @ a_vals                            # [L, za]
+        an = jnp.round(oh @ a_nnz.astype(acc.dtype)).astype(jnp.int32)
+
+        def z_step(z, acc):
+            amask = (z < an).astype(acc.dtype)      # [L]
+            contrib = av[:, z] * bv * bmask * amask  # [L]
+            # indexed vector store: one-hot row mask FMA on the VMEM tile
+            hit = (iota_m == ar[:, z][None, :]).astype(acc.dtype)
+            return acc + hit * contrib[None, :]
+
+        return jax.lax.fori_loop(0, za, z_step, acc)
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, zb, b_step, jnp.zeros((m, L), out_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_cols", "interpret"))
+def spa_spgemm(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz,
+               *, m: int, block_cols: int = 128, interpret: bool = True):
+    """Dense C [m, n_b] = A @ B, SPA dataflow, one grid step per column block.
+
+    n_b must be a multiple of block_cols (callers pad; see ops.py).
+    """
+    n_a, za = a_rows.shape
+    n_b, zb = b_rows.shape
+    assert n_b % block_cols == 0, (n_b, block_cols)
+    grid = (n_b // block_cols,)
+    kernel = functools.partial(_spa_kernel, m=m, za=za, n_a=n_a)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_cols, zb), lambda i: (i, 0)),   # b_rows
+            pl.BlockSpec((block_cols, zb), lambda i: (i, 0)),   # b_vals
+            pl.BlockSpec((block_cols,), lambda i: (i,)),        # b_nnz
+            pl.BlockSpec((n_a, za), lambda i: (0, 0)),          # a_rows
+            pl.BlockSpec((n_a, za), lambda i: (0, 0)),          # a_vals
+            pl.BlockSpec((n_a,), lambda i: (0,)),               # a_nnz
+        ],
+        out_specs=pl.BlockSpec((m, block_cols), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n_b), a_vals.dtype),
+        interpret=interpret,
+    )(b_rows, b_vals, b_nnz, a_rows, a_vals, a_nnz)

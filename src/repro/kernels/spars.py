@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: SPARS lock-step SpGEMM (Algorithm 3).
+
+Faithful TPU transliteration of the paper's lane-per-column dataflow: a block
+of L C-columns advances in lock-step, one intermediate product per lane per
+step, with cursor vectors ``vIndices_B`` / ``vCounter_A`` and masked lanes for
+exhausted columns. The per-lane dense accumulators (``SPA_values``/``flags``)
+are an ``[m, L]`` VMEM tile. RVV indexed loads become one-hot MXU gathers;
+indexed stores become one-hot mask FMAs (races impossible: one product per
+lane per step, private accumulator column per lane — the paper's write-
+independence argument by layout).
+
+The per-block trip count (max Op_j in the block) is data-dependent; it rides
+in as a scalar-prefetch operand per grid step, exactly how a production TPU
+kernel consumes CSC pointer structure (PrefetchScalarGridSpec).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spars_kernel(steps_ref,            # scalar prefetch: [n_blocks] int32
+                  b_rows_ref, b_vals_ref, b_nnz_ref,
+                  a_rows_ref, a_vals_ref, a_nnz_ref,
+                  out_ref, flags_ref, *, m: int, za: int, n_a: int):
+    L, zb = b_rows_ref.shape
+    steps = steps_ref[pl.program_id(0)]
+    a_rows_f = a_rows_ref[...].astype(jnp.float32)
+    a_vals = a_vals_ref[...]
+    a_nnz_f = a_nnz_ref[...].astype(jnp.float32)
+    b_nnz = b_nnz_ref[...]
+    iota_na = jax.lax.broadcasted_iota(jnp.int32, (L, n_a), 1)
+    iota_zb = jax.lax.broadcasted_iota(jnp.int32, (L, zb), 1)
+    iota_za = jax.lax.broadcasted_iota(jnp.int32, (L, za), 1)
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (m, L), 0)
+
+    def step(_, carry):
+        vidx_b, vcnt_a, acc, flags = carry
+        active = vidx_b < b_nnz                           # [L] vMask
+        # -- indexed vector load of vB (gather via one-hot over this lane's
+        #    B column entries)
+        sel_b = (vidx_b[:, None] == iota_zb).astype(acc.dtype)
+        bk = jnp.round((sel_b * b_rows_ref[...]).sum(1)).astype(jnp.int32)
+        bv = (sel_b * b_vals_ref[...]).sum(1)             # [L]
+        # -- indexed vector load of vA (row gather over the A table, MXU)
+        oh = (bk[:, None] == iota_na).astype(acc.dtype)   # [L, n_a]
+        ar_all = oh @ a_rows_f                            # [L, za]
+        av_all = oh @ a_vals
+        an = jnp.round(oh @ a_nnz_f).astype(jnp.int32)    # [L] col lengths
+        sel_a = (vcnt_a[:, None] == iota_za).astype(acc.dtype)
+        r = jnp.round((sel_a * ar_all).sum(1)).astype(jnp.int32)  # [L]
+        av = (sel_a * av_all).sum(1)
+        # -- FMA + indexed store into the [m, L] accumulator
+        contrib = jnp.where(active, av * bv, 0.0)
+        hit = (iota_m == r[None, :]).astype(acc.dtype)
+        hit = hit * active[None, :].astype(acc.dtype)
+        acc = acc + hit * contrib[None, :]
+        flags = jnp.maximum(flags, hit)
+        # -- cursor update (Algorithm 3 lines 15-19)
+        last = vcnt_a + 1 >= an
+        vcnt_a = jnp.where(active & ~last, vcnt_a + 1, 0)
+        vidx_b = vidx_b + (active & last).astype(vidx_b.dtype)
+        return vidx_b, vcnt_a, acc, flags
+
+    init = (
+        jnp.zeros((L,), jnp.int32),
+        jnp.zeros((L,), jnp.int32),
+        jnp.zeros((m, L), out_ref.dtype),
+        jnp.zeros((m, L), out_ref.dtype),
+    )
+    _, _, acc, flags = jax.lax.fori_loop(0, steps, step, init)
+    out_ref[...] = acc
+    flags_ref[...] = flags
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "block_cols", "interpret"))
+def spars_spgemm(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, steps,
+                 *, m: int, block_cols: int = 128, interpret: bool = True):
+    """Dense C [m, n_b] + flags, SPARS dataflow.
+
+    ``steps[i]`` = trip count of block i (max Op_j over its columns, from the
+    host-side blocking pre-process). n_b % block_cols == 0.
+    """
+    n_a, za = a_rows.shape
+    n_b, zb = b_rows.shape
+    assert n_b % block_cols == 0, (n_b, block_cols)
+    n_blocks = n_b // block_cols
+    kernel = functools.partial(_spars_kernel, m=m, za=za, n_a=n_a)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_cols, zb), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_cols, zb), lambda i, s: (i, 0)),
+            pl.BlockSpec((block_cols,), lambda i, s: (i,)),
+            pl.BlockSpec((n_a, za), lambda i, s: (0, 0)),
+            pl.BlockSpec((n_a, za), lambda i, s: (0, 0)),
+            pl.BlockSpec((n_a,), lambda i, s: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, block_cols), lambda i, s: (0, i)),
+            pl.BlockSpec((m, block_cols), lambda i, s: (0, i)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n_b), a_vals.dtype),
+            jax.ShapeDtypeStruct((m, n_b), a_vals.dtype),
+        ],
+        interpret=interpret,
+    )(steps, b_rows, b_vals, b_nnz, a_rows, a_vals, a_nnz)

@@ -1,0 +1,37 @@
+"""Production meshes (DESIGN.md §5).
+
+Defined as functions so importing this module never touches jax device state.
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; 'pod' is DP by default
+(or the pipeline axis with --pipeline).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "run under launch/dryrun.py (it sets "
+            "--xla_force_host_platform_device_count=512)")
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (tests, examples)."""
+    import numpy as np
+
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

@@ -1,0 +1,71 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+Train cells feed (state, batch, step); decode cells feed
+(params, token, cache, cur_len); prefill cells feed (params, tokens[, aux]).
+Modality frontends are stubs per the assignment: aux inputs are precomputed
+frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import batch_spec, cache_specs
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.lm import init_cache
+
+
+def _aux_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.n_audio_frames, cfg.d_model), dtype)
+    return None
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    shardings = {
+        "tokens": NamedSharding(mesh, batch_spec(mesh, b, 1)),
+        "labels": NamedSharding(mesh, batch_spec(mesh, b, 1)),
+    }
+    aux = _aux_spec(cfg, b)
+    if aux is not None:
+        batch["aux"] = aux
+        shardings["aux"] = NamedSharding(mesh, batch_spec(mesh, b, 2))
+    return batch, shardings
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       cache_dtype=jnp.bfloat16):
+    b, s = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cur_len = jax.ShapeDtypeStruct((b,), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, dtype=cache_dtype))
+    cache_sh = jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        cache_specs(cfg, cache, mesh))
+    tok_sh = NamedSharding(mesh, batch_spec(mesh, b, 1))
+    len_sh = NamedSharding(mesh, batch_spec(mesh, b, 0))
+    return (token, cache, cur_len), (tok_sh, cache_sh, len_sh)
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    sh = {"tokens": NamedSharding(mesh, batch_spec(mesh, b, 1))}
+    batch = {"tokens": tokens}
+    aux = _aux_spec(cfg, b)
+    if aux is not None:
+        batch["aux"] = aux
+        sh["aux"] = NamedSharding(mesh, batch_spec(mesh, b, 2))
+    return batch, sh

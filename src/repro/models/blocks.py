@@ -1,0 +1,240 @@
+"""Super-block assembly: every architecture is a scan over repeated blocks.
+
+A *super-block* is the smallest repeating unit of a family (one layer for
+dense/MoE/SSM; ``attn_every`` Mamba layers + one shared attention block for
+zamba2; ``cross_attn_every`` layers with a trailing cross-attention layer for
+the VLM; alternating dense/MoE pair for llama4). Stacking super-block params
+on a leading 'layers' axis and scanning keeps the HLO size O(1) in depth —
+essential for 100-layer dry-run compiles (DESIGN.md §5).
+
+Sub-layer kinds: "attn_ffn", "attn_moe", "mamba", "shared_attn" (applies the
+tied block), "attn_ffn_cross", "enc_attn_ffn", "dec_attn_cross_ffn".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pp
+from repro.models.layers import (
+    attention, attention_table, attention_decode, cross_attention_cached,
+    dense, ffn, ffn_table, rms_norm,
+)
+from repro.models.moe import moe_aux_loss, moe_ffn, moe_table
+from repro.models.ssm import mamba_forward, mamba_init_state, mamba_table
+
+
+def block_structure(cfg):
+    """(sub-layer kinds per super-block, n_rep, has_shared)."""
+    f = cfg.family
+    if f in ("dense",):
+        return ["attn_ffn"], cfg.n_layers, False
+    if f == "moe":
+        il = cfg.moe.interleave
+        if il == 1:
+            return ["attn_moe"], cfg.n_layers, False
+        kinds = ["attn_ffn"] * (il - 1) + ["attn_moe"]
+        assert cfg.n_layers % il == 0
+        return kinds, cfg.n_layers // il, False
+    if f == "ssm":
+        return ["mamba"], cfg.n_layers, False
+    if f == "hybrid":
+        k = cfg.attn_every
+        assert cfg.n_layers % k == 0
+        return ["mamba"] * k + ["shared_attn"], cfg.n_layers // k, True
+    if f == "vlm":
+        k = cfg.cross_attn_every
+        assert cfg.n_layers % k == 0
+        kinds = ["attn_ffn"] * (k - 1) + ["attn_ffn_cross"]
+        return kinds, cfg.n_layers // k, False
+    if f == "encdec":
+        return ["dec_attn_cross_ffn"], cfg.n_layers, False
+    raise ValueError(f)
+
+
+def _sub_table(cfg, kind):
+    if kind == "attn_ffn":
+        return {"ln1": pp.rmsnorm(cfg.d_model), "attn": attention_table(cfg),
+                "ln2": pp.rmsnorm(cfg.d_model), "ffn": ffn_table(cfg)}
+    if kind == "attn_moe":
+        return {"ln1": pp.rmsnorm(cfg.d_model), "attn": attention_table(cfg),
+                "ln2": pp.rmsnorm(cfg.d_model), "moe": moe_table(cfg)}
+    if kind == "mamba":
+        return {"ln": pp.rmsnorm(cfg.d_model), "mamba": mamba_table(cfg)}
+    if kind == "shared_attn":
+        return {}  # weights live in the shared table
+    if kind == "attn_ffn_cross":
+        return {"ln1": pp.rmsnorm(cfg.d_model), "attn": attention_table(cfg),
+                "lnx": pp.rmsnorm(cfg.d_model),
+                "xattn": attention_table(cfg, bias=False),
+                "xgate": pp.Leaf((), (), "zeros"),
+                "ln2": pp.rmsnorm(cfg.d_model), "ffn": ffn_table(cfg)}
+    if kind == "enc_attn_ffn":
+        return {"ln1": pp.rmsnorm(cfg.d_model), "attn": attention_table(cfg),
+                "ln2": pp.rmsnorm(cfg.d_model), "ffn": ffn_table(cfg)}
+    if kind == "dec_attn_cross_ffn":
+        return {"ln1": pp.rmsnorm(cfg.d_model), "attn": attention_table(cfg),
+                "lnx": pp.rmsnorm(cfg.d_model),
+                "xattn": attention_table(cfg, bias=False),
+                "ln2": pp.rmsnorm(cfg.d_model), "ffn": ffn_table(cfg)}
+    raise ValueError(kind)
+
+
+def superblock_table(cfg):
+    kinds, n_rep, has_shared = block_structure(cfg)
+    table = {f"l{i}": _sub_table(cfg, k) for i, k in enumerate(kinds)}
+    shared = None
+    if has_shared:
+        shared = {"ln1": pp.rmsnorm(cfg.d_model),
+                  "attn": attention_table(cfg),
+                  "ln2": pp.rmsnorm(cfg.d_model), "ffn": ffn_table(cfg)}
+    return table, kinds, n_rep, shared
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _sub_forward(p, shared, cfg, kind, h, *, memory=None, causal=True):
+    """One sub-layer, full sequence. Returns (h, aux_loss)."""
+    aux = jnp.float32(0)
+    if kind in ("attn_ffn", "attn_moe", "attn_ffn_cross", "enc_attn_ffn",
+                "dec_attn_cross_ffn"):
+        h = h + attention(p["attn"], cfg, rms_norm(p["ln1"], h, cfg.norm_eps),
+                          causal=causal and kind != "enc_attn_ffn")
+        if kind in ("attn_ffn_cross", "dec_attn_cross_ffn"):
+            xa = attention(p["xattn"], cfg,
+                           rms_norm(p["lnx"], h, cfg.norm_eps),
+                           kv_src=memory, causal=False, use_rope=False)
+            if "xgate" in p:
+                xa = jnp.tanh(p["xgate"]).astype(h.dtype) * xa
+            h = h + xa
+        hn = rms_norm(p["ln2"], h, cfg.norm_eps)
+        if kind == "attn_moe":
+            aux = moe_aux_loss(p["moe"], cfg, hn)
+            h = h + moe_ffn(p["moe"], cfg, hn)
+        else:
+            h = h + ffn(p["ffn"], hn)
+        return h, aux
+    if kind == "mamba":
+        y, _ = mamba_forward(p["mamba"], cfg,
+                             rms_norm(p["ln"], h, cfg.norm_eps))
+        return h + y, aux
+    if kind == "shared_attn":
+        sp = shared
+        h = h + attention(sp["attn"], cfg,
+                          rms_norm(sp["ln1"], h, cfg.norm_eps), causal=True)
+        h = h + ffn(sp["ffn"], rms_norm(sp["ln2"], h, cfg.norm_eps))
+        return h, aux
+    raise ValueError(kind)
+
+
+def stage_forward(stacked, shared, cfg, kinds, h, *, memory=None,
+                  causal=True):
+    """Scan the super-block over its reps. Returns (h, total_aux)."""
+
+    from repro.distributed.hints import hint
+
+    def block(carry, p_rep):
+        h, aux = carry
+        h = hint(h, "dp", None, None)  # pin residual-stream batch sharding
+        for i, kind in enumerate(kinds):
+            h, a = _sub_forward(p_rep.get(f"l{i}", {}), shared, cfg, kind, h,
+                                memory=memory, causal=causal)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat == "full":
+        block = jax.checkpoint(
+            block, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "dots":
+        block = jax.checkpoint(
+            block,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    (h, aux), _ = jax.lax.scan(block, (h, jnp.float32(0)), stacked)
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against caches)
+# ---------------------------------------------------------------------------
+
+
+def sub_cache_shape(cfg, kind, batch, cache_len, dtype=jnp.bfloat16):
+    """Zero/abstract cache for one sub-layer."""
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    kv = lambda s: jnp.zeros((batch, s, hkv, dh), dtype)
+    if kind in ("attn_ffn", "attn_moe", "shared_attn"):
+        return {"k": kv(cache_len), "v": kv(cache_len)}
+    if kind == "mamba":
+        conv, h = mamba_init_state(cfg, batch, dtype)
+        return {"conv": conv, "h": h}
+    if kind == "attn_ffn_cross":
+        return {"k": kv(cache_len), "v": kv(cache_len),
+                "xk": kv(cfg.n_image_tokens), "xv": kv(cfg.n_image_tokens)}
+    if kind == "dec_attn_cross_ffn":
+        return {"k": kv(cache_len), "v": kv(cache_len),
+                "xk": kv(cfg.n_audio_frames), "xv": kv(cfg.n_audio_frames)}
+    raise ValueError(kind)
+
+
+def _sub_decode(p, shared, cfg, kind, h, cache, cur_len):
+    if kind in ("attn_ffn", "attn_moe", "attn_ffn_cross",
+                "dec_attn_cross_ffn"):
+        a, ck, cv = attention_decode(
+            p["attn"], cfg, rms_norm(p["ln1"], h, cfg.norm_eps),
+            cache["k"], cache["v"], cur_len)
+        h = h + a
+        cache = dict(cache, k=ck, v=cv)
+        if kind in ("attn_ffn_cross", "dec_attn_cross_ffn"):
+            xa = cross_attention_cached(
+                p["xattn"], cfg, rms_norm(p["lnx"], h, cfg.norm_eps),
+                cache["xk"], cache["xv"])
+            if "xgate" in p:
+                xa = jnp.tanh(p["xgate"]).astype(h.dtype) * xa
+            h = h + xa
+        hn = rms_norm(p["ln2"], h, cfg.norm_eps)
+        if kind == "attn_moe":
+            h = h + moe_ffn(p["moe"], cfg, hn)
+        else:
+            h = h + ffn(p["ffn"], hn)
+        return h, cache
+    if kind == "mamba":
+        y, (conv, hs) = mamba_forward(
+            p["mamba"], cfg, rms_norm(p["ln"], h, cfg.norm_eps),
+            state=(cache["conv"], cache["h"]))
+        return h + y, {"conv": conv, "h": hs}
+    if kind == "shared_attn":
+        sp = shared
+        a, ck, cv = attention_decode(
+            sp["attn"], cfg, rms_norm(sp["ln1"], h, cfg.norm_eps),
+            cache["k"], cache["v"], cur_len)
+        h = h + a
+        h = h + ffn(sp["ffn"], rms_norm(sp["ln2"], h, cfg.norm_eps))
+        return h, dict(cache, k=ck, v=cv)
+    raise ValueError(kind)
+
+
+def stage_decode(stacked, shared, cfg, kinds, h, caches, cur_len):
+    """Scan decode over reps; caches stacked on the rep axis."""
+
+    def block(h, pc):
+        p_rep, c_rep = pc
+        new_c = {}
+        for i, kind in enumerate(kinds):
+            h, new_c[f"l{i}"] = _sub_decode(
+                p_rep.get(f"l{i}", {}), shared, cfg, kind, h,
+                c_rep[f"l{i}"], cur_len)
+        return h, new_c
+
+    h, new_caches = jax.lax.scan(block, h, (stacked, caches))
+    return h, new_caches
+
+
+def stage_cache(cfg, kinds, n_rep, batch, cache_len, dtype=jnp.bfloat16):
+    one = {f"l{i}": sub_cache_shape(cfg, k, batch, cache_len, dtype)
+           for i, k in enumerate(kinds)}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros((n_rep,) + x.shape, x.dtype), one)

@@ -1,0 +1,285 @@
+"""Model primitives: norm, rotary, chunked (flash-style) attention, FFN, loss.
+
+All functions are pure; parameters come from ``params.py`` tables. Attention
+is two-level chunked with online softmax so no [S, S] score tensor is ever
+materialized — required for the 32k prefill shapes (DESIGN.md §5) — and is
+plain jnp, so GSPMD shards it with the surrounding program.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.hints import hint, hint_heads
+from repro.models import params as pp
+
+NEG_INF = -1e30
+
+
+def rms_norm(p, x, eps=1e-5):
+    # variance in f32, but the main data path stays in x.dtype so backward
+    # cotangents (which cross TP all-reduces) stay bf16 — see EXPERIMENTS.md
+    # §Perf iteration 2
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """x [..., S, H, D]; positions [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    ang = ang[..., None, :]                                # head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention_table(cfg, *, kv_from: int | None = None, bias=None):
+    """QKV + out projections; fused head dims (see DESIGN.md §5 sharding)."""
+    d = cfg.d_model
+    d_kv_src = kv_from if kv_from is not None else d
+    bias = cfg.qkv_bias if bias is None else bias
+    return {
+        "wq": pp.linear(d, cfg.qkv_fused_q, "embed", "heads", bias=bias),
+        "wk": pp.linear(d_kv_src, cfg.qkv_fused_kv, "embed", "heads",
+                        bias=bias),
+        "wv": pp.linear(d_kv_src, cfg.qkv_fused_kv, "embed", "heads",
+                        bias=bias),
+        "wo": pp.linear(cfg.qkv_fused_q, d, "heads", "embed"),
+    }
+
+
+def _chunked_attn(q, k, v, *, causal: bool, q_offset, q_chunk, kv_chunk):
+    """Online-softmax attention. q [B,Sq,Hkv,G,D], k/v [B,Skv,Hkv,D]."""
+    b, sq, hkv, g, dh = q.shape
+    skv = k.shape[1]
+    cq = min(q_chunk, sq)
+    ck = min(kv_chunk, skv)
+    if sq % cq:
+        cq = sq   # non-divisible (e.g. ragged memory): single chunk
+    if skv % ck:
+        ck = skv  # e.g. 1601 image tokens: one kv chunk
+    nq, nk = sq // cq, skv // ck
+    scale = dh ** -0.5
+
+    qs = q.reshape(b, nq, cq, hkv, g, dh)
+    ks = k.reshape(b, nk, ck, hkv, dh)
+    vs = v.reshape(b, nk, ck, hkv, dh)
+
+    def q_block(iq):
+        qb = qs[:, iq] * scale                     # [B,cq,Hkv,G,D]
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        @jax.checkpoint  # recompute p-matrices in backward (flash-style)
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kb = ks[:, ik]
+            vb = vs[:, ik]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32)
+            if causal:
+                k_pos = ik * ck + jnp.arange(ck)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, cq), jnp.float32),
+            jnp.zeros((b, hkv, g, cq, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)        # [B,cq,Hkv,G,D]
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))     # [nq,B,cq,Hkv,G,D]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hkv, g, dh)
+    return out
+
+
+def attention(p, cfg, x, *, kv_src=None, causal=True, positions=None,
+              kv_positions=None, use_rope=True):
+    """Self- or cross-attention over full sequences (train/prefill)."""
+    b, s, _ = x.shape
+    kv_in = x if kv_src is None else kv_src
+    skv = kv_in.shape[1]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = hq // hkv
+    q = hint_heads(dense(p["wq"], x).reshape(b, s, hkv, g, dh))
+    k = hint_heads(dense(p["wk"], kv_in).reshape(b, skv, hkv, dh),
+                   head_dims=(2,))
+    v = hint_heads(dense(p["wv"], kv_in).reshape(b, skv, hkv, dh),
+                   head_dims=(2,))
+    if use_rope:
+        if positions is None:
+            positions = jnp.arange(s)[None, :]
+        if kv_positions is None:
+            kv_positions = jnp.arange(skv)[None, :]
+        q = hint_heads(rope(q.reshape(b, s, hkv * g, dh), positions,
+                            cfg.rope_theta).reshape(b, s, hkv, g, dh))
+        k = hint_heads(rope(k, kv_positions, cfg.rope_theta), head_dims=(2,))
+    out = _chunked_attn(q, k, v, causal=causal, q_offset=0,
+                        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    out = hint(out.reshape(b, s, hq * dh).astype(x.dtype),
+               "dp", None, "model")
+    return dense(p["wo"], out)
+
+
+def attention_decode(p, cfg, x, cache_k, cache_v, cur_len, *, use_rope=True):
+    """One-token decode against a KV cache.
+
+    x [B,1,D]; cache_k/v [B,S,Hkv,Dh]; cur_len: scalar or [B] per-slot counts
+    of tokens already cached (continuous batching). Returns
+    (out [B,1,D], new_k, new_v).
+    """
+    b, _, _ = x.shape
+    s_max = cache_k.shape[1]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = hq // hkv
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (b,))
+    q = dense(p["wq"], x).reshape(b, 1, hkv, g, dh)
+    k = dense(p["wk"], x).reshape(b, 1, hkv, dh)
+    v = dense(p["wv"], x).reshape(b, 1, hkv, dh)
+    if use_rope:
+        pos = cur[:, None]
+        q = rope(q.reshape(b, 1, hkv * g, dh), pos,
+                 cfg.rope_theta).reshape(b, 1, hkv, g, dh)
+        k = rope(k, pos, cfg.rope_theta)
+    # per-slot scatter of the new KV at position cur_len[b]
+    slot = (jnp.arange(s_max)[None, :] == cur[:, None])[..., None, None]
+    cache_k = jnp.where(slot, k.astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(slot, v.astype(cache_v.dtype), cache_v)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q * dh ** -0.5,
+                   cache_k.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    mask = (jnp.arange(s_max)[None, :] <= cur[:, None])[
+        :, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(cache_v.dtype),
+                     cache_v, preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, hq * dh).astype(x.dtype)
+    return dense(p["wo"], out), cache_k, cache_v
+
+
+def cross_attention_cached(p, cfg, x, mem_k, mem_v):
+    """Cross-attention against precomputed memory K/V (decode path)."""
+    b = x.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = hq // hkv
+    q = dense(p["wq"], x).reshape(b, 1, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q * dh ** -0.5,
+                   mem_k.astype(q.dtype),
+                   preferred_element_type=jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(mem_v.dtype), mem_v,
+                     preferred_element_type=jnp.float32)
+    return dense(p["wo"], out.reshape(b, 1, hq * dh).astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_table(cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "gate": pp.linear(d, f, "embed", "mlp"),
+        "up": pp.linear(d, f, "embed", "mlp"),
+        "down": pp.linear(f, d, "mlp", "embed"),
+    }
+
+
+def ffn(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x))
+                 * dense(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# embedding + chunked LM loss
+# ---------------------------------------------------------------------------
+
+
+def embed_table(cfg):
+    return {"embedding": pp.Leaf((cfg.vocab_padded, cfg.d_model),
+                                 ("vocab", "embed"), "normal:0.02")}
+
+
+def embed(p, tokens):
+    return p["embedding"][tokens]
+
+
+def unembed_table(cfg):
+    return pp.linear(cfg.d_model, cfg.vocab_padded, "embed", "vocab")
+
+
+def lm_loss(p_unembed, cfg, h, labels):
+    """Mean next-token cross-entropy; seq-chunked so [B,S,Vpad] never exists.
+
+    h [B,S,D] (already final-normed); labels [B,S] int32 (-1 = ignore).
+    """
+    b, s, d = h.shape
+    c = min(cfg.logits_chunk, s)
+    assert s % c == 0
+    vpad, v = cfg.vocab_padded, cfg.vocab
+    hs = h.reshape(b, s // c, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, s // c, c).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute the [B,c,Vpad] logits in backward
+    def chunk(carry, hl):
+        hc, lc = hl
+        logits = (hc @ p_unembed["w"].astype(hc.dtype)).astype(jnp.float32)
+        if vpad > v:
+            pad_mask = jnp.arange(vpad) >= v
+            logits = jnp.where(pad_mask[None, None, :], NEG_INF, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + ((lse - gold) * valid).sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_logits(p_unembed, cfg, h):
+    """Full logits (serve path; callers keep S tiny)."""
+    logits = (h @ p_unembed["w"].astype(h.dtype)).astype(jnp.float32)
+    if cfg.vocab_padded > cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    return logits

@@ -1,0 +1,126 @@
+"""Full language model: tables, init, train/prefill/decode entry points.
+
+Public surface (consumed by launch/, serving/, training/):
+  model_tables(cfg)            -> declarative param table (+ spec derivation)
+  init_params / abstract_params
+  train_loss(params, cfg, batch)            batch: tokens, labels (+aux)
+  prefill(params, cfg, tokens, ...)         -> final hidden
+  decode_step(params, cfg, token, cache, cur_len) -> (logits, cache)
+  init_cache(cfg, batch, cache_len)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pp
+from repro.models.blocks import (
+    block_structure, stage_cache, stage_decode, stage_forward,
+    superblock_table,
+)
+from repro.models.layers import (
+    attention_table, embed, embed_table, ffn_table, lm_logits, lm_loss,
+    rms_norm, unembed_table, dense,
+)
+from repro.models.params import (
+    abstract_params, init_params as _init, partition_specs, stack_tables,
+)
+
+AUX_COEF = 0.01
+
+
+def model_tables(cfg):
+    table, kinds, n_rep, shared = superblock_table(cfg)
+    t = {
+        "embed": embed_table(cfg),
+        "blocks": stack_tables(table, n_rep),
+        "final_norm": pp.rmsnorm(cfg.d_model),
+        "unembed": unembed_table(cfg),
+    }
+    if shared is not None:
+        t["shared"] = shared
+    if cfg.family == "encdec":
+        enc_table = stack_tables(
+            {"l0": {"ln1": pp.rmsnorm(cfg.d_model),
+                    "attn": attention_table(cfg),
+                    "ln2": pp.rmsnorm(cfg.d_model),
+                    "ffn": ffn_table(cfg)}},
+            cfg.n_encoder_layers)
+        t["encoder"] = enc_table
+        t["enc_norm"] = pp.rmsnorm(cfg.d_model)
+    return t
+
+
+def init_model(cfg, key, dtype=jnp.float32):
+    return _init(model_tables(cfg), key, dtype)
+
+
+def abstract_model(cfg, dtype=jnp.bfloat16):
+    return abstract_params(model_tables(cfg), dtype)
+
+
+def model_specs(cfg, rules):
+    return partition_specs(model_tables(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _memory_from_aux(params, cfg, aux):
+    """Encoder memory (encdec) or image embeddings (vlm) for cross-attn."""
+    if cfg.family == "encdec":
+        h = aux  # [B, S_enc, D] precomputed frame embeddings (stub frontend)
+        kinds = ["enc_attn_ffn"]
+        h, _ = stage_forward(params["encoder"], None, cfg, kinds, h,
+                             causal=False)
+        return rms_norm(params["enc_norm"], h, cfg.norm_eps)
+    if cfg.family == "vlm":
+        return aux  # [B, N_img, D] pre-projected patch embeddings (stub)
+    return None
+
+
+def backbone(params, cfg, tokens, aux=None):
+    """tokens [B,S] -> final-normed hidden [B,S,D] (+ MoE aux loss)."""
+    h = embed(params["embed"], tokens)
+    memory = _memory_from_aux(params, cfg, aux)
+    _, kinds, _, _ = superblock_table(cfg)
+    h, aux_loss = stage_forward(
+        params["blocks"], params.get("shared"), cfg, kinds, h, memory=memory)
+    return rms_norm(params["final_norm"], h, cfg.norm_eps), aux_loss
+
+
+def train_loss(params, cfg, batch):
+    """batch: dict(tokens [B,S], labels [B,S], aux?) -> scalar loss."""
+    h, aux_loss = backbone(params, cfg, batch["tokens"], batch.get("aux"))
+    loss = lm_loss(params["unembed"], cfg, h, batch["labels"])
+    return loss + AUX_COEF * aux_loss.astype(loss.dtype)
+
+
+def prefill(params, cfg, tokens, aux=None):
+    h, _ = backbone(params, cfg, tokens, aux)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    _, kinds, n_rep, _ = superblock_table(cfg)
+    return stage_cache(cfg, kinds, n_rep, batch, cache_len, dtype)
+
+
+def decode_step(params, cfg, token, cache, cur_len):
+    """token [B,1] int32 -> (logits [B,1,Vpad], new_cache).
+
+    cur_len: scalar count of tokens already in the cache.
+    """
+    h = embed(params["embed"], token)
+    _, kinds, _, _ = superblock_table(cfg)
+    h, new_cache = stage_decode(
+        params["blocks"], params.get("shared"), cfg, kinds, h, cache,
+        cur_len)
+    h = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    return lm_logits(params["unembed"], cfg, h), new_cache

@@ -1,0 +1,136 @@
+"""Declarative parameters: one table drives init, shapes, and sharding.
+
+A *table* is a nested dict whose leaves are ``Leaf(shape, axes, init)``:
+  shape : tuple of ints
+  axes  : tuple of logical axis names (len == len(shape)); None = replicated
+  init  : "normal:<std>" | "zeros" | "ones" | "fan_in" | "ssm_a" | "dt_bias"
+
+From one table we derive
+  * init_params(table, key, dtype)      -> pytree of arrays
+  * abstract_params(table, dtype)       -> pytree of ShapeDtypeStruct
+  * partition_specs(table, rules)       -> pytree of PartitionSpec
+
+``rules`` maps logical axis -> mesh axis (or tuple). Divisibility is checked
+per-leaf: if a dim doesn't divide over the assigned mesh axes, the rule falls
+back to a prefix of the mesh-axis tuple, then to replication — so one rule set
+serves every architecture (56-head models simply get that tensor replicated
+or fused-dim sharded; see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Leaf:
+    shape: tuple
+    axes: tuple
+    init: str = "fan_in"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_leaf(x):
+    return isinstance(x, Leaf)
+
+
+def _map_table(table, fn):
+    return jax.tree_util.tree_map(fn, table, is_leaf=_is_leaf)
+
+
+def _init_leaf(leaf: Leaf, key, dtype):
+    shape = leaf.shape
+    kind = leaf.init
+    if kind == "zeros":
+        return jnp.zeros(shape, dtype)
+    if kind == "ones":
+        return jnp.ones(shape, dtype)
+    if kind == "ssm_a":
+        # mamba: A = -exp(A_log), A_log ~ log(uniform[1, d_state])
+        n = shape[-1]
+        base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, shape).astype(dtype)
+    if kind == "dt_bias":
+        # mamba: dt bias so softplus(dt) ~ uniform[1e-3, 1e-1]
+        u = jax.random.uniform(key, shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+    if kind.startswith("normal:"):
+        std = float(kind.split(":")[1])
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    if kind == "fan_in":
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(kind)
+
+
+def init_params(table, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(table, is_leaf=_is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [_init_leaf(l, k, dtype) for l, k in zip(leaves, keys)])
+
+
+def abstract_params(table, dtype=jnp.float32):
+    return _map_table(
+        table, lambda l: jax.ShapeDtypeStruct(l.shape, dtype))
+
+
+def stack_tables(table, n: int):
+    """Prepend a scan ('layers') axis of length n to every leaf."""
+    return _map_table(
+        table,
+        lambda l: Leaf((n,) + l.shape, ("layers",) + l.axes, l.init))
+
+
+def _spec_for(leaf: Leaf, rules: dict) -> P:
+    parts = []
+    used: set = set()  # a mesh axis may shard at most one dim per tensor
+    for dim, ax in zip(leaf.shape, leaf.axes):
+        assigned = rules.get(ax)
+        if assigned is None:
+            parts.append(None)
+            continue
+        if isinstance(assigned, str):
+            assigned = (assigned,)
+        assigned = tuple(a for a in assigned if a not in used)
+        # longest prefix of the mesh-axis tuple that divides the dim
+        chosen = None
+        for k in range(len(assigned), 0, -1):
+            prod = int(np.prod([rules["__sizes__"][a] for a in assigned[:k]]))
+            if dim % prod == 0:
+                chosen = assigned[:k]
+                break
+        if chosen:
+            used.update(chosen)
+        parts.append(chosen if chosen is None or len(chosen) > 1
+                     else chosen[0])
+    return P(*parts)
+
+
+def partition_specs(table, rules: dict):
+    return _map_table(table, lambda l: _spec_for(l, rules))
+
+
+# -- common table builders --------------------------------------------------
+
+
+def linear(d_in, d_out, ax_in, ax_out, *, bias=False, init="fan_in"):
+    t = {"w": Leaf((d_in, d_out), (ax_in, ax_out), init)}
+    if bias:
+        t["b"] = Leaf((d_out,), (ax_out,), "zeros")
+    return t
+
+
+def rmsnorm(d, ax="embed"):
+    return {"scale": Leaf((d,), (ax,), "ones")}

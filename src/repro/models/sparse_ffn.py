@@ -1,0 +1,104 @@
+"""SparseFFN: pruned-weight FFN served through the paper's hybrid policy.
+
+The TPU re-targeting of H-SPA(t)/H-HASH(t) (DESIGN.md §3.1): the switching
+statistic is block-level density instead of per-column Op_j, and the two
+execution regimes are
+  * dense path  — plain MXU matmul (the SPA analogue: dense accumulator,
+    throughput-optimal when most blocks are present), chosen when the kept-
+    block fraction >= ``t_density``;
+  * sparse path — the BSR Pallas kernel (kernels/bsr_spmm.py), which skips
+    absent blocks entirely (the SPARS/HASH analogue), chosen for sparser
+    weights.
+
+``from_dense`` prunes by block magnitude to a target density. The policy is
+per-matrix, decided at conversion time (weights are static at serving time,
+exactly like the paper's pre-processing phase).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bsr_spmm import bsr_from_dense, bsr_spmm
+
+
+@dataclasses.dataclass
+class SparseMatmul:
+    """One pruned weight matrix with its chosen execution path."""
+
+    path: str                   # "dense" | "bsr"
+    dense_w: jax.Array | None
+    block_idx: jax.Array | None
+    block_nnz: jax.Array | None
+    blocks: jax.Array | None
+    shape: tuple
+    density: float
+
+    @classmethod
+    def from_dense(cls, w, *, bm=8, bk=8, keep_density=0.5,
+                   t_density=0.75) -> "SparseMatmul":
+        w = np.asarray(w, np.float32)
+        m, k = w.shape
+        n_rb, n_cb = m // bm, k // bk
+        tiles = w.reshape(n_rb, bm, n_cb, bk).transpose(0, 2, 1, 3)
+        norms = np.abs(tiles).max(axis=(2, 3))
+        n_keep = max(1, int(round(keep_density * n_rb * n_cb)))
+        thresh = np.partition(norms.reshape(-1), -n_keep)[-n_keep]
+        pruned = np.where((norms >= thresh)[:, :, None, None], tiles, 0.0)
+        w_pruned = pruned.transpose(0, 2, 1, 3).reshape(m, k)
+        density = float((norms >= thresh).mean())
+        if density >= t_density:   # paper's hybrid switch: stay dense (SPA)
+            return cls("dense", jnp.asarray(w_pruned), None, None, None,
+                       (m, k), density)
+        bi, bn, blocks = bsr_from_dense(w_pruned, bm, bk)
+        return cls("bsr", None, jnp.asarray(bi), jnp.asarray(bn),
+                   jnp.asarray(blocks), (m, k), density)
+
+    def __call__(self, x, *, bn=None, interpret=True):
+        """y = W @ x for x [K, N]."""
+        if self.path == "dense":
+            return self.dense_w @ x
+        n = x.shape[1]
+        bn = bn or min(128, n)
+        return bsr_spmm(self.block_idx, self.block_nnz, self.blocks, x,
+                        bn=bn, interpret=interpret)
+
+    @property
+    def flops_per_col(self) -> int:
+        m, k = self.shape
+        if self.path == "dense":
+            return 2 * m * k
+        nb = int(np.asarray(self.block_nnz).sum())
+        bm, bk = self.blocks.shape[2], self.blocks.shape[3]
+        return 2 * nb * bm * bk
+
+
+@dataclasses.dataclass
+class SparseFFN:
+    """SwiGLU FFN with pruned gate/up/down matrices."""
+
+    gate: SparseMatmul
+    up: SparseMatmul
+    down: SparseMatmul
+
+    @classmethod
+    def from_params(cls, p, *, keep_density=0.4, t_density=0.75, bm=8, bk=8):
+        mk = lambda w: SparseMatmul.from_dense(
+            np.asarray(w).T, bm=bm, bk=bk, keep_density=keep_density,
+            t_density=t_density)
+        return cls(mk(p["gate"]["w"]), mk(p["up"]["w"]), mk(p["down"]["w"]))
+
+    def __call__(self, x):
+        """x [T, D] -> [T, D] (column-major through the kernels)."""
+        xt = x.T                                   # [D, T]
+        h = jax.nn.silu(self.gate(xt)) * self.up(xt)
+        return self.down(h).T
+
+    @property
+    def flops_per_token(self) -> int:
+        return (self.gate.flops_per_col + self.up.flops_per_col
+                + self.down.flops_per_col)

@@ -1,0 +1,235 @@
+"""Mamba1 (selective scan) and Mamba2 (scalar-decay SSD) blocks.
+
+Training/prefill uses a chunked associative scan: the sequence is cut into
+``cfg.ssm.chunk``-length chunks; within a chunk the linear recurrence runs as
+``jax.lax.associative_scan`` (log-depth, VPU-friendly), across chunks a
+lax.scan carries the state. Memory per chunk is [B, c, d_inner/TP, d_state],
+which is what makes the 500k-token shapes feasible (DESIGN.md §4).
+
+Decode is the exact single-step recurrence with (conv window, SSM state)
+carried in the serve cache.
+
+Simplification vs reference Mamba2: the short conv is applied to x only (not
+B/C); noted in DESIGN.md §2 as a non-essential deviation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as pp
+from repro.models.layers import dense, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# tables
+# ---------------------------------------------------------------------------
+
+
+def mamba_table(cfg):
+    s = cfg.ssm
+    d, din, ds = cfg.d_model, cfg.d_inner, s.d_state
+    if s.version == 1:
+        dtr = cfg.dt_rank_actual
+        return {
+            "in_proj": pp.linear(d, 2 * din, "embed", "ssm_inner"),
+            "conv_w": pp.Leaf((s.d_conv, din), (None, "ssm_inner"),
+                              "normal:0.1"),
+            "conv_b": pp.Leaf((din,), ("ssm_inner",), "zeros"),
+            "x_proj": pp.linear(din, dtr + 2 * ds, "ssm_inner", None),
+            "dt_proj": pp.linear(dtr, din, None, "ssm_inner",
+                                 init="normal:0.01"),
+            "dt_bias": pp.Leaf((din,), ("ssm_inner",), "dt_bias"),
+            "a_log": pp.Leaf((din, ds), ("ssm_inner", None), "ssm_a"),
+            "d_skip": pp.Leaf((din,), ("ssm_inner",), "ones"),
+            "out_proj": pp.linear(din, d, "ssm_inner", "embed"),
+        }
+    nh = din // s.head_dim
+    return {
+        "in_proj": pp.linear(d, 2 * din + 2 * ds + nh, "embed", "ssm_inner"),
+        "conv_w": pp.Leaf((s.d_conv, din), (None, "ssm_inner"), "normal:0.1"),
+        "conv_b": pp.Leaf((din,), ("ssm_inner",), "zeros"),
+        "dt_bias": pp.Leaf((nh,), (None,), "dt_bias"),
+        "a_log": pp.Leaf((nh,), (None,), "ssm_a"),
+        "d_skip": pp.Leaf((nh,), (None,), "ones"),
+        "norm": pp.Leaf((din,), ("ssm_inner",), "ones"),
+        "out_proj": pp.linear(din, d, "ssm_inner", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, b, window=None):
+    """Depthwise causal conv. x [B,S,C], w [K,C]. window: [B,K-1,C] history
+    for decode continuity (None = zero history)."""
+    k = w.shape[0]
+    if window is None:
+        window = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([window, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _scan_chunks(a, u, h0):
+    """h_t = a_t * h_{t-1} + u_t over time axis 1, associative scan.
+
+    a, u: [B, c, ...] (same shape); h0 [B, ...]. Returns (h_all [B,c,...],
+    h_last).
+    """
+
+    def op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, u_cum = jax.lax.associative_scan(op, (a, u), axis=1)
+    h_all = a_cum * h0[:, None] + u_cum
+    return h_all, h_all[:, -1]
+
+
+def _chunked_ssm_apply(build_fn, inputs, h0, chunk, seq_len):
+    """Chunked linear recurrence without materializing [B,S,...,d_state].
+
+    ``inputs``: pytree of [B, S, ...] per-timestep tensors. Per chunk, the
+    (rematerialized) body calls ``build_fn(chunk_inputs)`` ->
+    (a [B,c,...,state], u [B,c,...,state], y_fn(h_all) -> y_chunk), runs the
+    associative scan, and emits only the chunk output — so the
+    state-expanded tensors exist for one chunk at a time (DESIGN.md §4).
+    Returns ([B, S, ...out], h_last).
+    """
+    c = min(chunk, seq_len)
+    assert seq_len % c == 0, (seq_len, c)
+    n = seq_len // c
+
+    def to_chunks(x):
+        b = x.shape[0]
+        return x.reshape((b, n, c) + x.shape[2:]).swapaxes(0, 1)
+
+    chunked = jax.tree_util.tree_map(to_chunks, inputs)
+
+    @jax.checkpoint
+    def step(h, ch_in):
+        a, u, y_fn = build_fn(ch_in)
+        h_all, h_last = _scan_chunks(a, u, h)
+        return h_last, y_fn(h_all)
+
+    h_last, ys = jax.lax.scan(step, h0, chunked)
+    ys = ys.swapaxes(0, 1)  # [B, n, c, ...]
+    return ys.reshape((ys.shape[0], seq_len) + ys.shape[3:]), h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+
+def mamba1_forward(p, cfg, x, state=None):
+    """x [B,S,D] -> (y [B,S,D], new_state). state = (conv_win, h)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    din, ds = cfg.d_inner, s_cfg.d_state
+    dtr = cfg.dt_rank_actual
+    conv_win, h0 = state if state is not None else (None, None)
+
+    xz = dense(p["in_proj"], x)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv(xin, p["conv_w"].astype(x.dtype),
+                      p["conv_b"].astype(x.dtype), conv_win)
+    new_conv_win = jnp.concatenate(
+        [conv_win if conv_win is not None
+         else jnp.zeros((b, s_cfg.d_conv - 1, din), x.dtype), xin],
+        axis=1)[:, -(s_cfg.d_conv - 1):]
+    xc = jax.nn.silu(xc)
+
+    proj = dense(p["x_proj"], xc)
+    dt_raw, bmat, cmat = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt_raw)
+                         + p["dt_bias"][None, None, :]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # [din, ds]
+    if h0 is None:
+        h0 = jnp.zeros((b, din, ds), jnp.float32)
+
+    def build(ch):
+        dt_c, xc_c, b_c, c_c = ch                           # [B,c,...]
+        decay = jnp.exp(dt_c[..., None] * a[None, None])    # [B,c,din,ds]
+        drive = (dt_c * xc_c.astype(jnp.float32))[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, :]
+        y_fn = lambda h_all: jnp.einsum(
+            "bsdn,bsn->bsd", h_all, c_c.astype(jnp.float32))
+        return decay, drive, y_fn
+
+    y, h_last = _chunked_ssm_apply(
+        build, (dt, xc, bmat, cmat), h0, s_cfg.chunk, s)
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    return dense(p["out_proj"], y), (new_conv_win, h_last)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (scalar decay per head)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_forward(p, cfg, x, state=None):
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    din, ds, hd = cfg.d_inner, s_cfg.d_state, s_cfg.head_dim
+    nh = din // hd
+    conv_win, h0 = state if state is not None else (None, None)
+
+    zxbcdt = dense(p["in_proj"], x)
+    z, xin, bmat, cmat, dt_raw = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + ds, 2 * din + 2 * ds], axis=-1)
+    xc = _causal_conv(xin, p["conv_w"].astype(x.dtype),
+                      p["conv_b"].astype(x.dtype), conv_win)
+    new_conv_win = jnp.concatenate(
+        [conv_win if conv_win is not None
+         else jnp.zeros((b, s_cfg.d_conv - 1, din), x.dtype), xin],
+        axis=1)[:, -(s_cfg.d_conv - 1):]
+    xc = jax.nn.silu(xc)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])       # [B,S,nh]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [nh]
+    xh = xc.reshape(b, s, nh, hd).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    def build(ch):
+        dt_c, xh_c, b_c, c_c = ch
+        decay = jnp.exp(dt_c * a[None, None])[..., None, None]
+        drive = (dt_c[..., None] * xh_c)[..., None] \
+            * b_c.astype(jnp.float32)[:, :, None, None, :]   # [B,c,nh,hd,ds]
+        decay_b = jnp.broadcast_to(decay, drive.shape)
+        y_fn = lambda h_all: jnp.einsum(
+            "bshdn,bsn->bshd", h_all, c_c.astype(jnp.float32))
+        return decay_b, drive, y_fn
+
+    y, h_last = _chunked_ssm_apply(
+        build, (dt, xh, bmat, cmat), h0, s_cfg.chunk, s)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm({"scale": p["norm"]}, y, cfg.norm_eps)
+    return dense(p["out_proj"], y), (new_conv_win, h_last)
+
+
+def mamba_forward(p, cfg, x, state=None):
+    fn = mamba1_forward if cfg.ssm.version == 1 else mamba2_forward
+    return fn(p, cfg, x, state)
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    din = cfg.d_inner
+    conv = jnp.zeros((batch, s.d_conv - 1, din), dtype)
+    if s.version == 1:
+        h = jnp.zeros((batch, din, s.d_state), jnp.float32)
+    else:
+        h = jnp.zeros((batch, din // s.head_dim, s.head_dim, s.d_state),
+                      jnp.float32)
+    return conv, h

@@ -1,0 +1,5 @@
+"""Serving substrate: caches (models.init_cache) + batched engine."""
+
+from repro.serving.engine import Request, ServeEngine
+
+__all__ = ["Request", "ServeEngine"]

@@ -1,0 +1,151 @@
+"""Batched serving engine with continuous batching.
+
+Fixed batch of slots; each decode tick feeds every active slot its next token
+(prompt token while prefilling, sampled token after) through one jitted
+``decode_step`` with per-slot cache lengths. New requests claim free slots
+mid-flight; finished requests (EOS / max tokens) free theirs. This is
+decode-granularity continuous batching — production chunked prefill is an
+orthogonal extension, noted in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import decode_step, init_cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    # filled by the engine
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 4,
+                 cache_len: int = 256, seed: int = 0, aux=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.cache = init_cache(cfg, max_batch, cache_len,
+                                dtype=jnp.float32)
+        if aux is not None:  # cross-attention memories (vlm/encdec)
+            self._install_memory(aux)
+        self.cur_len = np.zeros(max_batch, np.int32)
+        self.slots: list[Optional[Request]] = [None] * max_batch
+        self.prefill_pos = np.zeros(max_batch, np.int64)
+        self.queue: deque[Request] = deque()
+        self.finished: dict[int, Request] = {}
+        self.rng = np.random.default_rng(seed)
+        self._rid = 0
+        self._step = jax.jit(
+            lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+
+    def _install_memory(self, aux):
+        """Precompute cross K/V from stub embeddings into the cache."""
+        from repro.models.blocks import superblock_table
+        from repro.models.layers import dense as _dense
+
+        _, kinds, n_rep, _ = superblock_table(self.cfg)
+        mem = aux  # [B, N, D]
+        cfgc = self.cfg
+
+        def per_rep(p_rep):
+            out = {}
+            for i, kind in enumerate(kinds):
+                if kind in ("attn_ffn_cross", "dec_attn_cross_ffn"):
+                    pr = jax.tree_util.tree_map(lambda a: a, p_rep[f"l{i}"])
+                    k = _dense(pr["xattn"]["wk"], mem).reshape(
+                        mem.shape[0], mem.shape[1], cfgc.n_kv_heads,
+                        cfgc.d_head)
+                    v = _dense(pr["xattn"]["wv"], mem).reshape(
+                        mem.shape[0], mem.shape[1], cfgc.n_kv_heads,
+                        cfgc.d_head)
+                    out[f"l{i}"] = (k, v)
+            return out
+
+        mems = jax.vmap(per_rep)(self.params["blocks"])
+        for key, (k, v) in mems.items():
+            self.cache[key]["xk"] = k.astype(self.cache[key]["xk"].dtype)
+            self.cache[key]["xv"] = v.astype(self.cache[key]["xv"].dtype)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens=32, temperature=0.0,
+               eos_id=None) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, list(prompt), max_new_tokens,
+                                  temperature, eos_id))
+        return self._rid
+
+    def _admit(self):
+        for b in range(self.max_batch):
+            if self.slots[b] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[b] = req
+                self.cur_len[b] = 0
+                self.prefill_pos[b] = 0
+
+    def _next_tokens(self):
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pos = self.prefill_pos[b]
+            if pos < len(req.prompt):
+                toks[b, 0] = req.prompt[pos]
+            else:
+                toks[b, 0] = req.generated[-1]
+        return toks
+
+    def step(self):
+        """One engine tick: admit, decode, sample, retire."""
+        self._admit()
+        if all(s is None for s in self.slots):
+            return False
+        toks = self._next_tokens()
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.cur_len))
+        logits = np.asarray(logits[:, 0, : self.cfg.vocab], np.float32)
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.cur_len[b] += 1
+            if self.prefill_pos[b] < len(req.prompt) - 1:
+                self.prefill_pos[b] += 1  # still prefilling; ignore logits
+                continue
+            self.prefill_pos[b] = len(req.prompt)
+            if req.temperature > 0:
+                p = np.exp((logits[b] - logits[b].max()) / req.temperature)
+                tok = int(self.rng.choice(len(p), p=p / p.sum()))
+            else:
+                tok = int(np.argmax(logits[b]))
+            req.generated.append(tok)
+            full = self.cur_len[b] >= self.cache_len - 1
+            if (len(req.generated) >= req.max_new_tokens or full
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                req.done = True
+                self.finished[req.rid] = req
+                self.slots[b] = None
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.finished

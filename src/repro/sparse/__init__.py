@@ -1,0 +1,60 @@
+"""Sparse-matrix substrate: formats, generators, statistics.
+
+The containers here are deliberately simple, static-capacity pytrees so they can
+flow through jit/pjit. All preprocessing (sorting, blocking, stats) operates on
+host numpy for speed and determinism; kernels consume the JAX-array views.
+"""
+
+from repro.sparse.format import (
+    CSC,
+    CSR,
+    COO,
+    csc_from_dense,
+    csc_to_dense,
+    csc_to_csr,
+    csr_to_csc,
+    csc_from_coo,
+    csc_to_padded_columns,
+    validate_csc,
+)
+from repro.sparse.generate import (
+    random_uniform_csc,
+    random_density_csc,
+    random_banded_csc,
+    random_powerlaw_csc,
+)
+from repro.sparse.stats import (
+    column_nnz,
+    ops_per_column,
+    matrix_stats,
+    MatrixStats,
+)
+from repro.sparse.suitesparse import (
+    SUITESPARSE_TABLE1,
+    MatrixSpec,
+    synthesize_suitesparse,
+)
+
+__all__ = [
+    "CSC",
+    "CSR",
+    "COO",
+    "csc_from_dense",
+    "csc_to_dense",
+    "csc_to_csr",
+    "csr_to_csc",
+    "csc_from_coo",
+    "csc_to_padded_columns",
+    "validate_csc",
+    "random_uniform_csc",
+    "random_density_csc",
+    "random_banded_csc",
+    "random_powerlaw_csc",
+    "column_nnz",
+    "ops_per_column",
+    "matrix_stats",
+    "MatrixStats",
+    "SUITESPARSE_TABLE1",
+    "MatrixSpec",
+    "synthesize_suitesparse",
+]

@@ -1,0 +1,280 @@
+"""Sparse matrix containers (CSC primary, matching the paper) + conversions.
+
+Design notes
+------------
+* CSC is the paper's working format: ``values``/``row_indices`` of length nnz and
+  ``col_ptr`` of length ``n_cols + 1`` (first cell 0, last cell nnz).
+* Containers are frozen dataclasses registered as JAX pytrees; ``shape`` is static
+  aux data. Arrays may be numpy (host preprocessing) or jax.Array (device compute);
+  all conversions preserve the array namespace where practical.
+* Capacities are static: a container may be over-allocated (``values.shape[0] >=
+  nnz``) so jit'd producers with data-dependent output size can write into a fixed
+  buffer. ``nnz`` is always derivable as ``int(col_ptr[-1])``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array  # or np.ndarray; duck-typed throughout.
+
+
+def _np(x):
+    """Host view of an array (no-op for numpy)."""
+    return np.asarray(x)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSC:
+    """Compressed Sparse Column matrix.
+
+    values[p]       value of the p-th stored element
+    row_indices[p]  its row
+    col_ptr[j]      offset of the first stored element of column j; col_ptr[n] = nnz
+    shape           (n_rows, n_cols), static
+    """
+
+    values: Array
+    row_indices: Array
+    col_ptr: Array
+    shape: Tuple[int, int]
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.values, self.row_indices, self.col_ptr), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, row_indices, col_ptr = children
+        return cls(values, row_indices, col_ptr, aux)
+
+    # -- basic properties ------------------------------------------------
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(_np(self.col_ptr)[-1])
+
+    @property
+    def capacity(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def to_device(self) -> "CSC":
+        return CSC(
+            jnp.asarray(self.values),
+            jnp.asarray(self.row_indices, jnp.int32),
+            jnp.asarray(self.col_ptr, jnp.int32),
+            self.shape,
+        )
+
+    def to_host(self) -> "CSC":
+        return CSC(
+            _np(self.values), _np(self.row_indices), _np(self.col_ptr), self.shape
+        )
+
+    def column(self, j: int):
+        """Host-side (rows, vals) of column j."""
+        cp = _np(self.col_ptr)
+        lo, hi = int(cp[j]), int(cp[j + 1])
+        return _np(self.row_indices)[lo:hi], _np(self.values)[lo:hi]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed Sparse Row matrix (transpose-dual of CSC)."""
+
+    values: Array
+    col_indices: Array
+    row_ptr: Array
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.values, self.col_indices, self.row_ptr), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, col_indices, row_ptr = children
+        return cls(values, col_indices, row_ptr, aux)
+
+    @property
+    def nnz(self) -> int:
+        return int(_np(self.row_ptr)[-1])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class COO:
+    """Coordinate format (row, col, val triplets)."""
+
+    rows: Array
+    cols: Array
+    values: Array
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.rows, self.cols, self.values), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, cols, values = children
+        return cls(rows, cols, values, aux)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# Conversions (host-side; generators and tests use these)
+# ---------------------------------------------------------------------------
+
+
+def csc_from_dense(dense, tol: float = 0.0) -> CSC:
+    d = _np(dense)
+    n_rows, n_cols = d.shape
+    mask = np.abs(d) > tol
+    col_nnz = mask.sum(axis=0)
+    col_ptr = np.zeros(n_cols + 1, np.int32)
+    np.cumsum(col_nnz, out=col_ptr[1:])
+    rows_list = []
+    vals_list = []
+    for j in range(n_cols):
+        (r,) = np.nonzero(mask[:, j])
+        rows_list.append(r)
+        vals_list.append(d[r, j])
+    rows = (
+        np.concatenate(rows_list).astype(np.int32)
+        if rows_list
+        else np.zeros(0, np.int32)
+    )
+    vals = np.concatenate(vals_list) if vals_list else np.zeros(0, d.dtype)
+    return CSC(vals, rows, col_ptr, (n_rows, n_cols))
+
+
+def csc_to_dense(m: CSC):
+    vals = _np(m.values)
+    rows = _np(m.row_indices)
+    cp = _np(m.col_ptr)
+    out = np.zeros(m.shape, vals.dtype)
+    for j in range(m.n_cols):
+        lo, hi = cp[j], cp[j + 1]
+        # duplicate row entries within a column accumulate (general CSC semantics)
+        np.add.at(out[:, j], rows[lo:hi], vals[lo:hi])
+    return out
+
+
+def csc_from_coo(coo: COO, sum_duplicates: bool = True) -> CSC:
+    rows = _np(coo.rows).astype(np.int64)
+    cols = _np(coo.cols).astype(np.int64)
+    vals = _np(coo.values)
+    n_rows, n_cols = coo.shape
+    order = np.lexsort((rows, cols))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    if sum_duplicates and len(rows):
+        key = cols * n_rows + rows
+        uniq, inv = np.unique(key, return_inverse=True)
+        acc = np.zeros(len(uniq), vals.dtype)
+        np.add.at(acc, inv, vals)
+        cols = (uniq // n_rows).astype(np.int64)
+        rows = (uniq % n_rows).astype(np.int64)
+        vals = acc
+    col_ptr = np.zeros(n_cols + 1, np.int32)
+    np.add.at(col_ptr[1:], cols, 1)
+    np.cumsum(col_ptr, out=col_ptr)
+    return CSC(vals, rows.astype(np.int32), col_ptr, (n_rows, n_cols))
+
+
+def csc_to_csr(m: CSC) -> CSR:
+    vals = _np(m.values)[: m.nnz]
+    rows = _np(m.row_indices)[: m.nnz]
+    cp = _np(m.col_ptr)
+    cols = np.repeat(np.arange(m.n_cols, dtype=np.int32), np.diff(cp))
+    order = np.lexsort((cols, rows))
+    row_ptr = np.zeros(m.n_rows + 1, np.int32)
+    np.add.at(row_ptr[1:], rows, 1)
+    np.cumsum(row_ptr, out=row_ptr)
+    return CSR(vals[order], cols[order], row_ptr, m.shape)
+
+
+def csr_to_csc(m: CSR) -> CSC:
+    vals = _np(m.values)[: m.nnz]
+    cols = _np(m.col_indices)[: m.nnz]
+    rp = _np(m.row_ptr)
+    rows = np.repeat(np.arange(m.shape[0], dtype=np.int32), np.diff(rp))
+    order = np.lexsort((rows, cols))
+    col_ptr = np.zeros(m.shape[1] + 1, np.int32)
+    np.add.at(col_ptr[1:], cols, 1)
+    np.cumsum(col_ptr, out=col_ptr)
+    return CSC(vals[order], rows[order], col_ptr, m.shape)
+
+
+def transpose_csc(m: CSC) -> CSC:
+    """C^T in CSC == C in CSR reinterpreted."""
+    r = csc_to_csr(m)
+    return CSC(r.values, r.col_indices, r.row_ptr, (m.shape[1], m.shape[0]))
+
+
+def csc_to_padded_columns(m: CSC, pad_to: int | None = None):
+    """Ragged→rectangular view for lock-step kernels.
+
+    Returns (row_idx [n_cols, pad_to] int32, vals [n_cols, pad_to], nnz [n_cols]).
+    Padding slots have row_idx == 0 and vals == 0 (masked by nnz downstream).
+    """
+    cp = _np(m.col_ptr)
+    nnz_col = np.diff(cp).astype(np.int32)
+    width = int(nnz_col.max()) if len(nnz_col) and nnz_col.max() > 0 else 1
+    if pad_to is not None:
+        if pad_to < width:
+            raise ValueError(f"pad_to={pad_to} < max column nnz {width}")
+        width = pad_to
+    rows = np.zeros((m.n_cols, width), np.int32)
+    vals = np.zeros((m.n_cols, width), _np(m.values).dtype)
+    rr = _np(m.row_indices)
+    vv = _np(m.values)
+    for j in range(m.n_cols):
+        lo, hi = cp[j], cp[j + 1]
+        rows[j, : hi - lo] = rr[lo:hi]
+        vals[j, : hi - lo] = vv[lo:hi]
+    return rows, vals, nnz_col
+
+
+def validate_csc(m: CSC, *, sorted_rows: bool = False) -> None:
+    """Structural invariants; raises AssertionError on violation."""
+    cp = _np(m.col_ptr)
+    rows = _np(m.row_indices)
+    assert cp.shape == (m.n_cols + 1,), "col_ptr length"
+    assert cp[0] == 0, "col_ptr[0] must be 0"
+    assert (np.diff(cp) >= 0).all(), "col_ptr must be non-decreasing"
+    nnz = int(cp[-1])
+    assert nnz <= m.capacity, "nnz exceeds capacity"
+    assert rows.shape[0] >= nnz, "row_indices capacity"
+    if nnz:
+        assert rows[:nnz].min() >= 0 and rows[:nnz].max() < m.n_rows, "row bounds"
+    if sorted_rows:
+        for j in range(m.n_cols):
+            seg = rows[cp[j] : cp[j + 1]]
+            assert (np.diff(seg) > 0).all(), f"rows not strictly sorted in col {j}"
+
+
+def csc_equal(a: CSC, b: CSC, rtol: float = 1e-6, atol: float = 1e-8) -> bool:
+    """Semantic equality (order-insensitive within columns, via densification)."""
+    if a.shape != b.shape:
+        return False
+    return np.allclose(csc_to_dense(a), csc_to_dense(b), rtol=rtol, atol=atol)

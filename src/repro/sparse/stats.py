@@ -1,0 +1,77 @@
+"""Matrix statistics used by the paper's pre-processing and evaluation tables."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.sparse.format import CSC, _np
+
+
+def column_nnz(m: CSC) -> np.ndarray:
+    """nnz per column, length n_cols."""
+    return np.diff(_np(m.col_ptr)).astype(np.int64)
+
+
+def ops_per_column(a: CSC, b: CSC) -> np.ndarray:
+    """Op_j = sum over nonzero B[k,j] of nnz(A[:,k])  (paper, Section 3.1).
+
+    The number of scalar multiplications needed for column j of C = A @ B.
+    """
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    za = column_nnz(a)  # [n_a_cols]
+    rows_b = _np(b.row_indices)[: b.nnz]
+    cp_b = _np(b.col_ptr)
+    contrib = za[rows_b]  # one term per stored B element
+    out = np.zeros(b.n_cols, np.int64)
+    seg = np.repeat(np.arange(b.n_cols), np.diff(cp_b))
+    np.add.at(out, seg, contrib)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixStats:
+    """The statistics columns of the paper's Table 1."""
+
+    n_rows: int
+    n_cols: int
+    nnz: int
+    nnz_min: int
+    nnz_max: int
+    nnz_avg: float
+    nnz_var: float
+    mult_min: int
+    mult_max: int
+    mult_avg: float
+    mult_var: float
+
+    def row(self) -> str:
+        return (
+            f"{self.n_rows}x{self.n_cols} nnz={self.nnz} "
+            f"nnz/col[min={self.nnz_min} max={self.nnz_max} "
+            f"avg={self.nnz_avg:.2f} var={self.nnz_var:.2f}] "
+            f"mult/col[min={self.mult_min} max={self.mult_max} "
+            f"avg={self.mult_avg:.2f} var={self.mult_var:.2f}]"
+        )
+
+
+def matrix_stats(m: CSC, other: CSC | None = None) -> MatrixStats:
+    """Stats for C = M @ M (paper uses A = B) or C = other @ m if given."""
+    a = other if other is not None else m
+    z = column_nnz(m)
+    ops = ops_per_column(a, m)
+    return MatrixStats(
+        n_rows=m.n_rows,
+        n_cols=m.n_cols,
+        nnz=m.nnz,
+        nnz_min=int(z.min()),
+        nnz_max=int(z.max()),
+        nnz_avg=float(z.mean()),
+        nnz_var=float(z.var()),
+        mult_min=int(ops.min()),
+        mult_max=int(ops.max()),
+        mult_avg=float(ops.mean()),
+        mult_var=float(ops.var()),
+    )

@@ -1,0 +1,22 @@
+"""Training substrate: optimizer, schedules, data, checkpointing, loop."""
+
+from repro.training.checkpoint import (
+    AsyncCheckpointer, latest_checkpoint, restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.data import DataConfig, SyntheticLoader, synth_batch
+from repro.training.optimizer import (
+    AdamWConfig, adamw_init, adamw_update, opt_state_specs,
+)
+from repro.training.schedule import constant, warmup_cosine
+from repro.training.train_loop import (
+    TrainConfig, Trainer, build_train_step, init_train_state,
+)
+
+__all__ = [
+    "AsyncCheckpointer", "latest_checkpoint", "restore_checkpoint",
+    "save_checkpoint", "DataConfig", "SyntheticLoader", "synth_batch",
+    "AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs",
+    "constant", "warmup_cosine", "TrainConfig", "Trainer",
+    "build_train_step", "init_train_state",
+]

@@ -1,0 +1,196 @@
+"""Train-step builder + fault-tolerant host loop.
+
+The step is a single jit with donated state: microbatched grad accumulation
+(lax.scan; bf16 or fp32 accumulation buffer — bf16 is what fits llama4 on a
+single pod, DESIGN.md §5), AdamW (optionally 8-bit moments), warmup-cosine LR.
+
+The host ``Trainer`` provides the large-scale operational posture at
+laptop scale: auto-resume from the latest valid checkpoint, async
+checkpointing, heartbeat file + straggler watchdog (step time > factor x
+rolling median -> warning callback), SIGTERM preemption handling (checkpoint
++ clean exit), and deterministic data replay (E11).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import train_loss
+from repro.training.checkpoint import (
+    AsyncCheckpointer, latest_checkpoint, restore_checkpoint)
+from repro.training.data import SyntheticLoader
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.schedule import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    total_steps: int = 100
+    accum_steps: int = 1
+    accum_dtype: str = "float32"      # float32 | bfloat16
+    peak_lr: float = 3e-4
+    warmup_steps: int = 20
+    checkpoint_dir: str = ""
+    checkpoint_every: int = 50
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    opt: AdamWConfig = AdamWConfig()
+
+
+def _split_accum(batch, accum: int):
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    return jax.tree_util.tree_map(r, batch)
+
+
+def build_train_step(model_cfg, tc: TrainConfig):
+    """Returns step(state, batch, step_idx) -> (state, metrics)."""
+
+    def loss_fn(params, mb):
+        return train_loss(params, model_cfg, mb)
+
+    def step(state, batch, step_idx):
+        lr = warmup_cosine(step_idx, peak_lr=tc.peak_lr,
+                           warmup_steps=tc.warmup_steps,
+                           total_steps=tc.total_steps)
+        params = state["params"]
+        if tc.accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            stacked = _split_accum(batch, tc.accum_steps)
+            acc_dt = jnp.dtype(tc.accum_dtype)
+
+            def micro(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gg: a + gg.astype(a.dtype), acc, g)
+                return acc, l
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            grads, losses = jax.lax.scan(micro, zeros, stacked)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tc.accum_steps, grads)
+            loss = losses.mean()
+        new_params, new_opt = adamw_update(grads, state["opt"], params,
+                                           tc.opt, lr)
+        metrics = {"loss": loss.astype(jnp.float32), "lr": lr}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step
+
+
+def init_train_state(model_cfg, tc: TrainConfig, key, dtype=jnp.float32):
+    from repro.models.lm import init_model
+
+    params = init_model(model_cfg, key, dtype)
+    return {"params": params, "opt": adamw_init(params, tc.opt)}
+
+
+class Trainer:
+    """Host loop with the fault-tolerance drill (E11)."""
+
+    def __init__(self, model_cfg, tc: TrainConfig, loader: SyntheticLoader,
+                 state, *, jit_step=None, on_warning: Optional[Callable] = None,
+                 prepare_batch=None):
+        self.model_cfg = model_cfg
+        self.tc = tc
+        self.loader = loader
+        self.state = state
+        self.step_idx = 0
+        self.on_warning = on_warning or (lambda msg: print(f"[warn] {msg}"))
+        self.prepare_batch = prepare_batch or (lambda b: b)
+        self._step = jit_step or jax.jit(
+            build_train_step(model_cfg, tc), donate_argnums=(0,))
+        self._ckpt = (AsyncCheckpointer(tc.checkpoint_dir)
+                      if tc.checkpoint_dir else None)
+        self._durations: list[float] = []
+        self._preempted = False
+        self.metrics_log: list[dict] = []
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def install_preemption_handler(self, sig=signal.SIGTERM):
+        def handler(signum, frame):
+            self._preempted = True
+
+        signal.signal(sig, handler)
+
+    def try_resume(self) -> bool:
+        if not self.tc.checkpoint_dir:
+            return False
+        path = latest_checkpoint(self.tc.checkpoint_dir)
+        if path is None:
+            return False
+        self.state, step, extra = restore_checkpoint(path, self.state)
+        self.step_idx = step
+        self.loader = SyntheticLoader.restore(
+            self.loader.cfg, extra.get("data", {"step": step,
+                                                "seed": self.loader.cfg.seed}))
+        print(f"[resume] restored step {step} from {path}")
+        return True
+
+    def _heartbeat(self):
+        if not self.tc.checkpoint_dir:
+            return
+        os.makedirs(self.tc.checkpoint_dir, exist_ok=True)
+        hb = os.path.join(self.tc.checkpoint_dir, "heartbeat.json")
+        with open(hb, "w") as f:
+            json.dump({"step": self.step_idx, "time": time.time()}, f)
+
+    def _watchdog(self, dt: float):
+        self._durations.append(dt)
+        hist = self._durations[-50:]
+        if len(hist) >= 10:
+            med = float(np.median(hist[:-1]))
+            if dt > self.tc.straggler_factor * med:
+                self.on_warning(
+                    f"straggler: step {self.step_idx} took {dt:.2f}s "
+                    f"(median {med:.2f}s)")
+
+    def checkpoint(self):
+        if self._ckpt:
+            self._ckpt.save(self.step_idx, self.state,
+                            extra={"data": self.loader.state()})
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self, n_steps: int | None = None) -> list[dict]:
+        end = self.tc.total_steps if n_steps is None \
+            else self.step_idx + n_steps
+        while self.step_idx < end and not self._preempted:
+            batch = self.prepare_batch(next(self.loader))
+            t0 = time.perf_counter()
+            self.state, metrics = self._step(
+                self.state, batch, jnp.int32(self.step_idx))
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.step_idx += 1
+            self._watchdog(dt)
+            self._heartbeat()
+            metrics.update(step=self.step_idx, sec=dt)
+            self.metrics_log.append(metrics)
+            if self.step_idx % self.tc.log_every == 0:
+                print(f"step {self.step_idx:5d} loss {metrics['loss']:.4f} "
+                      f"lr {metrics['lr']:.2e} {dt*1e3:.0f}ms")
+            if (self.tc.checkpoint_every
+                    and self.step_idx % self.tc.checkpoint_every == 0):
+                self.checkpoint()
+        if self._preempted:
+            print("[preempt] saving final checkpoint")
+            self.checkpoint()
+        if self._ckpt:
+            self._ckpt.wait()
+        return self.metrics_log

@@ -1,0 +1,9 @@
+"""Lock the jax backend to this container's single CPU device before any
+test can import repro.launch.dryrun (which sets the 512-fake-device XLA flag
+for the dry-run entry point — that flag must never apply to tests)."""
+
+import jax
+
+
+def pytest_configure(config):
+    jax.devices()  # initializes the backend with the default device count

@@ -1,0 +1,118 @@
+"""Vector-machine cost model: invariants + the paper's qualitative claims."""
+
+import numpy as np
+import pytest
+
+from repro.core import preprocess
+from repro.sparse import random_uniform_csc, ops_per_column
+from repro.vm import (
+    DEFAULT_MACHINE, Trace, c_column_nnz, trace_esc, trace_hash, trace_hybrid,
+    trace_spa, trace_spars,
+)
+from repro.vm.machine import Machine
+
+
+@pytest.fixture(scope="module")
+def mats():
+    return {z: random_uniform_csc(640, z, seed=z) for z in (2, 6, 10)}
+
+
+def test_trace_utilization_bounds(mats):
+    a = mats[2]
+    pre = preprocess(a, a, t=np.inf, b_min=40, b_max=40)
+    for tr in (trace_spa(a, a), trace_spars(a, a, pre),
+               trace_hash(a, a, pre), trace_esc(a, a)):
+        assert 0.0 < tr.utilization <= 1.0
+
+
+def test_spa_active_elements_cover_products(mats):
+    """SPA's main-loop FMA lanes == total intermediate products."""
+    a = mats[2]
+    tr = Trace()
+    from repro.vm.schedule import trace_spa as ts
+
+    ts(a, a, trace=tr)
+    ops_total = ops_per_column(a, a).sum()
+    fma = sum(c * vl for (k, vl, _), c in tr.counts.items() if k == "vfma")
+    assert fma == ops_total
+
+
+def test_spars_processes_blocks_of_equal_load(mats):
+    """Uniform Z: every block runs exactly Z^2 steps at full occupancy."""
+    a = mats[2]
+    pre = preprocess(a, a, t=np.inf, b_min=40, b_max=40)
+    tr = trace_spars(a, a, pre)
+    assert tr.utilization > 0.99  # no masking when loads are equal
+
+
+def test_machine_monotone_in_working_set():
+    m = DEFAULT_MACHINE
+    c_small = m.instr_cycles("vload_idx", 256, 16 << 10)
+    c_large = m.instr_cycles("vload_idx", 256, 64 << 20)
+    assert c_large > c_small
+    assert m.instr_cycles("vload", 256, 0) < c_small
+
+
+def test_machine_longer_vectors_amortize_issue():
+    m = DEFAULT_MACHINE
+    per_elem_short = m.instr_cycles("vfma", 8, 0) / 8
+    per_elem_long = m.instr_cycles("vfma", 256, 0) / 256
+    assert per_elem_long < per_elem_short
+
+
+# --- the paper's headline qualitative claims, on synthetic matrices -------
+
+
+def test_paper_claim_spars_wins_sparse_loses_dense(mats):
+    """Fig 3: SPARS (b=40) beats SPA for Z=2, loses for Z=10."""
+    m = DEFAULT_MACHINE
+    for z, expect_faster in ((2, True), (10, False)):
+        a = mats[z]
+        cn = c_column_nnz(a, a)
+        t_spa = m.seconds(trace_spa(a, a, c_nnz=cn))
+        pre = preprocess(a, a, t=np.inf, b_min=40, b_max=40)
+        t_spars = m.seconds(trace_spars(a, a, pre, c_nnz=cn))
+        assert (t_spars < t_spa) == expect_faster, (z, t_spars, t_spa)
+
+
+def test_paper_claim_spars_bmax_peak(mats):
+    """Fig 3: SPARS degrades past b_max ~ 40 (accumulator leaves L2)."""
+    a = mats[2]
+    cn = c_column_nnz(a, a)
+    m = DEFAULT_MACHINE
+
+    def t(bmax):
+        pre = preprocess(a, a, t=np.inf, b_min=bmax, b_max=bmax)
+        return m.seconds(trace_spars(a, a, pre, c_nnz=cn))
+
+    assert t(40) < t(8)     # longer vectors help at first
+    assert t(40) < t(256)   # then the accumulator range penalty dominates
+
+
+def test_paper_claim_hash_likes_large_blocks(mats):
+    """Fig 4: HASH keeps improving to b_max = 256 (small tables stay local)."""
+    a = mats[2]
+    cn = c_column_nnz(a, a)
+    m = DEFAULT_MACHINE
+
+    def t(bmax):
+        pre = preprocess(a, a, t=np.inf, b_min=bmax, b_max=bmax)
+        return m.seconds(trace_hash(a, a, pre, c_nnz=cn))
+
+    assert t(256) < t(40) < t(8)
+
+
+def test_paper_claim_hybrid_never_much_worse_than_spa(mats):
+    """Table 1: H-* saturates at ~1.0x for dense matrices (switches to SPA)."""
+    a = mats[10]
+    cn = c_column_nnz(a, a)
+    m = DEFAULT_MACHINE
+    t_spa = m.seconds(trace_spa(a, a, c_nnz=cn))
+    pre = preprocess(a, a, t=40.0, b_min=256, b_max=256)
+    t_h = m.seconds(trace_hybrid(a, a, pre, accumulator="hash", c_nnz=cn))
+    assert t_h <= t_spa * 1.05
+
+
+def test_calibrated_machine_loaded():
+    assert DEFAULT_MACHINE.issue != Machine.__dataclass_fields__[
+        "issue"].default or DEFAULT_MACHINE.beat_idx != 8.0

@@ -1,0 +1,59 @@
+"""Deliverable (e) gate: every required (arch x shape x mesh) cell must have
+a successful dry-run artifact. Skipped (with an explicit message) until
+launch/dryrun.py --all has produced them — CI order: dry-run first, then
+pytest."""
+
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import shapes_for
+
+DRY = os.path.join(os.environ.get("REPRO_CACHE", ".cache"), "dryrun")
+
+_have = bool(glob.glob(os.path.join(DRY, "*.json")))
+
+
+def _cells():
+    out = []
+    for arch in sorted(ARCHS):
+        for shape in shapes_for(ARCHS[arch]):
+            out.append((arch, shape.name))
+    return out
+
+
+@pytest.mark.skipif(not _have, reason="run repro.launch.dryrun --all first")
+@pytest.mark.parametrize("mesh", ["16x16", "2x16x16"])
+def test_all_cells_compiled(mesh):
+    missing = []
+    for arch, shape in _cells():
+        path = os.path.join(DRY, f"{arch}__{shape}__{mesh}.json")
+        if not os.path.exists(path):
+            missing.append(f"{arch}/{shape}")
+            continue
+        rec = json.load(open(path))
+        assert rec["collectives"]["total_bytes"] >= 0
+        assert rec["compile_seconds"] > 0
+    if mesh == "2x16x16" and missing == [f"{a}/{s}" for a, s in _cells()]:
+        pytest.skip("multi-pod sweep not yet run")
+    assert not missing, f"{len(missing)} cells missing for {mesh}: {missing}"
+
+
+@pytest.mark.skipif(not _have, reason="run repro.launch.dryrun --all first")
+def test_long_context_cells_only_for_subquadratic():
+    for path in glob.glob(os.path.join(DRY, "*long_500k*.json")):
+        rec = json.load(open(path))
+        assert ARCHS[rec["arch"]].supports_long_context
+
+
+@pytest.mark.skipif(not _have, reason="run repro.launch.dryrun --all first")
+def test_decode_cells_donate_cache_fit():
+    """Serve-cache argument bytes per device stay under the v5e HBM budget."""
+    for path in glob.glob(os.path.join(DRY, "*decode_32k__16x16.json")):
+        rec = json.load(open(path))
+        args = rec.get("memory", {}).get("argument_size_in_bytes")
+        if args:
+            assert args < 16 * 2**30, (path, args)

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import spgemm_dense
+from repro.core.reference import dense_product
+from repro.kernels import (
+    bsr_from_dense, bsr_spmm, spgemm_pallas, spa_spgemm, spars_spgemm,
+    hash_spgemm,
+)
+from repro.kernels.ref import (
+    spgemm_padded_ref, spars_ref, hash_tables_to_dense, bsr_spmm_ref,
+)
+from repro.sparse import (
+    csc_to_padded_columns, random_powerlaw_csc, random_uniform_csc,
+)
+from repro.sparse.format import csc_equal
+
+
+def _padded(m, dtype):
+    r, v, n = csc_to_padded_columns(m)
+    return (jnp.asarray(r, jnp.int32), jnp.asarray(v, dtype),
+            jnp.asarray(n, jnp.int32))
+
+
+@pytest.mark.parametrize("n,z,block", [(64, 2, 16), (96, 4, 32), (128, 6, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_spa_kernel_sweep(n, z, block, dtype):
+    a = random_uniform_csc(n, z, seed=n + z)
+    ar, av, an = _padded(a, dtype)
+    got = spa_spgemm(ar, av, an, ar, av, an, m=n, block_cols=block)
+    ref = spgemm_padded_ref(ar, av, an, ar, av, an, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got), dense_product(a, a),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,avg,block", [(64, 2.0, 16), (96, 3.0, 32)])
+def test_spars_kernel_sweep(n, avg, block):
+    from repro.sparse.stats import ops_per_column
+
+    a = random_powerlaw_csc(n, avg, seed=int(avg * 10))
+    ar, av, an = _padded(a, jnp.float32)
+    ops = ops_per_column(a, a)
+    order = np.argsort(-ops, kind="stable")
+    n_pad = -(-n // block) * block
+    br = np.zeros((n_pad, ar.shape[1]), np.int32)
+    bv = np.zeros((n_pad, av.shape[1]), np.float32)
+    bn = np.zeros(n_pad, np.int32)
+    br[:n], bv[:n], bn[:n] = (np.asarray(ar)[order], np.asarray(av)[order],
+                              np.asarray(an)[order])
+    steps = np.pad(ops[order], (0, n_pad - n)).reshape(-1, block).max(1)
+    got, flags = spars_spgemm(
+        ar, av, an, jnp.asarray(br), jnp.asarray(bv), jnp.asarray(bn),
+        jnp.asarray(steps, jnp.int32), m=n, block_cols=block)
+    dense = dense_product(a, a)
+    np.testing.assert_allclose(np.asarray(got)[:, :n], dense[:, order],
+                               rtol=1e-5, atol=1e-5)
+    # flags cover exactly the structurally-touched cells
+    struct = (np.abs(dense[:, order]) > 0)
+    got_flags = np.asarray(flags)[:, :n] > 0
+    assert (got_flags | ~struct).all()  # every nonzero is flagged
+
+
+@pytest.mark.parametrize("n,z,h,block", [(64, 2, 16, 16), (80, 3, 32, 16)])
+def test_hash_kernel_sweep(n, z, h, block):
+    from repro.sparse.stats import ops_per_column
+
+    a = random_uniform_csc(n, z, seed=7 * z)
+    ar, av, an = _padded(a, jnp.float32)
+    ops = ops_per_column(a, a)
+    assert ops.max() <= h, "test setup: table must fit"
+    n_pad = -(-n // block) * block
+    br = np.zeros((n_pad, ar.shape[1]), np.int32)
+    bv = np.zeros((n_pad, av.shape[1]), np.float32)
+    bn = np.zeros(n_pad, np.int32)
+    br[:n], bv[:n], bn[:n] = np.asarray(ar), np.asarray(av), np.asarray(an)
+    steps = np.pad(ops, (0, n_pad - n)).reshape(-1, block).max(1)
+    keys, vals = hash_spgemm(
+        ar, av, an, jnp.asarray(br), jnp.asarray(bv), jnp.asarray(bn),
+        jnp.asarray(steps, jnp.int32), m=n, h=h, block_cols=block)
+    got = np.asarray(hash_tables_to_dense(keys, vals, n))[:, :n]
+    np.testing.assert_allclose(got, dense_product(a, a), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", [
+    "spa", "spars-128/128", "hash-256/256", "h-spa-40/40", "h-hash-256/256",
+])
+def test_spgemm_pallas_end_to_end(method):
+    a = random_powerlaw_csc(72, 3.0, seed=11)
+    ref = spgemm_dense(a, a)
+    c = spgemm_pallas(a, a, method=method, block_cols=24)
+    assert csc_equal(c, ref, rtol=1e-4, atol=1e-5), method
+
+
+def test_spgemm_backend_dispatch():
+    from repro.core import spgemm
+
+    a = random_uniform_csc(48, 2, seed=3)
+    ref = spgemm_dense(a, a)
+    c = spgemm(a, a, method="spa", backend="pallas")
+    assert csc_equal(c, ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (8, 16, 32), (16, 16, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_kernel_sweep(bm, bk, bn, dtype):
+    rng = np.random.default_rng(bm * bk)
+    mdim, kdim, ndim = bm * 6, bk * 5, bn * 3
+    w = rng.normal(size=(mdim, kdim)).astype(np.float32)
+    # knock out ~half the blocks
+    for i in range(0, mdim, bm):
+        for j in range(0, kdim, bk):
+            if rng.uniform() < 0.5:
+                w[i : i + bm, j : j + bk] = 0
+    x = rng.normal(size=(kdim, ndim)).astype(np.float32)
+    bi, bnnz, blocks = bsr_from_dense(w, bm, bk)
+    got = bsr_spmm(jnp.asarray(bi), jnp.asarray(bnnz),
+                   jnp.asarray(blocks, dtype), jnp.asarray(x, dtype), bn=bn)
+    ref = bsr_spmm_ref(jnp.asarray(bi), jnp.asarray(bnnz),
+                       jnp.asarray(blocks, dtype), jnp.asarray(x, dtype))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), w @ x, rtol=tol,
+        atol=tol * np.abs(w @ x).max())
+
+
+def test_bsr_empty_rows():
+    w = np.zeros((16, 16), np.float32)
+    w[:8, :8] = 1.0
+    bi, bnnz, blocks = bsr_from_dense(w, 8, 8)
+    x = np.ones((16, 8), np.float32)
+    got = bsr_spmm(jnp.asarray(bi), jnp.asarray(bnnz), jnp.asarray(blocks),
+                   jnp.asarray(x), bn=8)
+    np.testing.assert_allclose(np.asarray(got), w @ x)

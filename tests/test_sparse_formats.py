@@ -1,0 +1,100 @@
+"""Sparse container unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    csc_from_dense, csc_to_dense, csc_to_csr, csr_to_csc, csc_from_coo,
+    csc_to_padded_columns, validate_csc, random_uniform_csc,
+    random_density_csc, random_powerlaw_csc, random_banded_csc,
+    column_nnz, ops_per_column, matrix_stats,
+)
+from repro.sparse.format import COO, transpose_csc, csc_equal
+
+
+@st.composite
+def dense_matrices(draw, max_dim=24):
+    n_rows = draw(st.integers(1, max_dim))
+    n_cols = draw(st.integers(1, max_dim))
+    seed = draw(st.integers(0, 2**31 - 1))
+    density = draw(st.floats(0.0, 0.6))
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(n_rows, n_cols))
+    d *= rng.uniform(size=d.shape) < density
+    return d
+
+
+@given(dense_matrices())
+@settings(max_examples=50, deadline=None)
+def test_dense_roundtrip(d):
+    m = csc_from_dense(d)
+    validate_csc(m, sorted_rows=True)
+    np.testing.assert_allclose(csc_to_dense(m), d)
+
+
+@given(dense_matrices())
+@settings(max_examples=50, deadline=None)
+def test_csr_roundtrip(d):
+    m = csc_from_dense(d)
+    back = csr_to_csc(csc_to_csr(m))
+    validate_csc(back)
+    np.testing.assert_allclose(csc_to_dense(back), d)
+
+
+@given(dense_matrices())
+@settings(max_examples=30, deadline=None)
+def test_transpose(d):
+    m = csc_from_dense(d)
+    np.testing.assert_allclose(csc_to_dense(transpose_csc(m)), d.T)
+
+
+def test_coo_duplicate_accumulation():
+    coo = COO(np.array([0, 0, 1], np.int32), np.array([0, 0, 1], np.int32),
+              np.array([1.0, 2.0, 3.0]), (2, 2))
+    m = csc_from_coo(coo)
+    dense = csc_to_dense(m)
+    np.testing.assert_allclose(dense, np.array([[3.0, 0.0], [0.0, 3.0]]))
+
+
+def test_padded_columns():
+    m = random_powerlaw_csc(40, 3.0, seed=1)
+    rows, vals, nnz = csc_to_padded_columns(m)
+    assert rows.shape == vals.shape and rows.shape[0] == 40
+    np.testing.assert_array_equal(nnz, column_nnz(m))
+    back = np.zeros(m.shape)
+    for j in range(40):
+        back[rows[j, : nnz[j]], j] = vals[j, : nnz[j]]
+    np.testing.assert_allclose(back, csc_to_dense(m))
+
+
+def test_uniform_generator_exact_degree():
+    m = random_uniform_csc(64, 5, seed=3)
+    validate_csc(m, sorted_rows=True)
+    assert (column_nnz(m) == 5).all()
+
+
+def test_ops_per_column_matches_bruteforce():
+    a = random_density_csc(30, 30, 0.15, seed=0)
+    b = random_density_csc(30, 30, 0.2, seed=1)
+    ops = ops_per_column(a, b)
+    da, db = csc_to_dense(a) != 0, csc_to_dense(b) != 0
+    expect = np.array([
+        sum(da[:, k].sum() for k in range(30) if db[k, j]) for j in range(30)
+    ])
+    np.testing.assert_array_equal(ops, expect)
+
+
+def test_matrix_stats_consistency():
+    m = random_banded_csc(50, 2, seed=0)
+    s = matrix_stats(m)
+    assert s.nnz == m.nnz
+    assert s.nnz_min <= s.nnz_avg <= s.nnz_max
+    assert s.mult_min <= s.mult_avg <= s.mult_max
+
+
+def test_csc_equal_detects_difference():
+    a = random_uniform_csc(20, 2, seed=0)
+    b = random_uniform_csc(20, 2, seed=1)
+    assert csc_equal(a, a)
+    assert not csc_equal(a, b)

@@ -1,0 +1,173 @@
+"""The paper's algorithms vs the dense oracle + pre-processing invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ALGORITHMS, spgemm, spgemm_dense, preprocess, blocking_schedule,
+    hash_table_size, hybrid_split, sort_columns, expand_products,
+    spgemm_expand,
+)
+from repro.sparse import (
+    random_uniform_csc, random_powerlaw_csc, random_density_csc,
+    ops_per_column, validate_csc,
+)
+from repro.sparse.format import csc_equal, csc_to_dense
+
+HOST_METHODS = [m for m in ALGORITHMS if m != "expand"]
+
+
+@pytest.mark.parametrize("method", HOST_METHODS)
+@pytest.mark.parametrize("gen,seed", [
+    ("uniform2", 0), ("uniform6", 1), ("powerlaw", 2), ("density", 3),
+])
+def test_algorithms_match_oracle(method, gen, seed):
+    a = {
+        "uniform2": lambda: random_uniform_csc(120, 2, seed=seed),
+        "uniform6": lambda: random_uniform_csc(90, 6, seed=seed),
+        "powerlaw": lambda: random_powerlaw_csc(100, 4.0, seed=seed),
+        "density": lambda: random_density_csc(80, 80, 0.08, seed=seed),
+    }[gen]()
+    ref = spgemm_dense(a, a)
+    c = spgemm(a, a, method=method)
+    validate_csc(c)
+    assert csc_equal(c, ref, rtol=1e-9, atol=1e-11), method
+
+
+def test_rectangular_spgemm():
+    a = random_density_csc(40, 60, 0.1, seed=5)
+    b = random_density_csc(60, 25, 0.15, seed=6)
+    ref = spgemm_dense(a, b)
+    for method in ("spa", "spars-40/40", "hash-256/256", "esc"):
+        assert csc_equal(spgemm(a, b, method=method), ref, rtol=1e-9)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_property_spgemm_random(seed, z):
+    n = 48
+    a = random_uniform_csc(n, min(z, n), seed=seed)
+    ref = csc_to_dense(spgemm_dense(a, a))
+    for method in ("spa", "spars-16/64", "h-hash-256/256"):
+        got = csc_to_dense(spgemm(a, a, method=method))
+        np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-11)
+
+
+def test_expand_is_exact_product_stream():
+    a = random_powerlaw_csc(60, 3.0, seed=7)
+    coo = expand_products(a, a)
+    ops = ops_per_column(a, a)
+    assert coo.nnz == ops.sum()
+    assert csc_equal(spgemm_expand(a, a), spgemm_dense(a, a), rtol=1e-9)
+
+
+# --- pre-processing invariants ------------------------------------------
+
+
+def test_sorting_is_decreasing_permutation():
+    a = random_powerlaw_csc(100, 4.0, seed=0)
+    ops = ops_per_column(a, a)
+    p = sort_columns(ops)
+    assert sorted(p.tolist()) == list(range(100))
+    assert (np.diff(ops[p]) <= 0).all()
+
+
+@given(st.integers(0, 1000), st.integers(1, 64), st.integers(0, 6))
+@settings(max_examples=50, deadline=None)
+def test_blocking_schedule_invariants(seed, b_min, extra):
+    b_max = b_min + extra
+    rng = np.random.default_rng(seed)
+    ops = np.sort(rng.integers(0, 50, size=200))[::-1]
+    sched = blocking_schedule(ops, b_min, b_max)
+    # covers [0, n) exactly, in order
+    assert sched.starts[0] == 0
+    ends = sched.starts + sched.sizes
+    assert (sched.starts[1:] == ends[:-1]).all()
+    assert ends[-1] == 200
+    for s, z in sched:
+        assert 1 <= z <= b_max
+        blk = ops[s : s + z]
+        # growth beyond b_min only while Op stays equal to the block head
+        if z > b_min:
+            assert (blk[b_min:] == blk[0]).all()
+
+
+def test_hash_table_size_bounds():
+    for op in (1, 2, 3, 4, 5, 127, 128, 129, 1000):
+        h = hash_table_size(op)
+        assert h & (h - 1) == 0
+        assert h >= op
+        if op > 1:
+            assert h < 2 * op + 2
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_hybrid_split_boundary(t):
+    ops = np.sort(np.random.default_rng(0).integers(0, 80, 150))[::-1]
+    k = hybrid_split(ops, float(t))
+    if t == 0:
+        assert k == len(ops)
+    else:
+        assert (ops[:k] >= t).all()
+        assert (ops[k:] < t).all()
+
+
+def test_hybrid_limits_match_pure():
+    """t=0 ≡ SPA; t=inf ≡ SPARS/HASH (Section 3.3)."""
+    a = random_powerlaw_csc(60, 3.0, seed=9)
+    ref = spgemm_dense(a, a)
+    from repro.core.naive import hybrid_numpy
+
+    for acc in ("spa", "hash"):
+        c0 = hybrid_numpy(a, a, t=0.0, b_min=40, b_max=40, accumulator=acc)
+        cinf = hybrid_numpy(a, a, t=np.inf, b_min=40, b_max=40,
+                            accumulator=acc)
+        assert csc_equal(c0, ref, rtol=1e-9)
+        assert csc_equal(cinf, ref, rtol=1e-9)
+
+
+def test_preprocess_hash_sizes_monotone():
+    a = random_powerlaw_csc(120, 4.0, seed=2)
+    pre = preprocess(a, a, t=np.inf, b_min=16, b_max=64)
+    assert (np.diff(pre.hash_sizes) <= 0).all()
+    for (s, z), h in zip(pre.blocks, pre.hash_sizes):
+        assert h >= pre.ops_sorted[s] or h == pre.hash_sizes[0]
+
+
+def test_empty_and_degenerate():
+    # empty columns, zero matrix
+    a = random_density_csc(20, 20, 0.0, seed=0)
+    ref = spgemm_dense(a, a)
+    for method in ("spa", "spars-40/40", "hash-256/256"):
+        assert csc_equal(spgemm(a, a, method=method), ref)
+
+
+def test_work_stealing_spars_matches_oracle():
+    """Beyond-paper lane-refill variant is value-identical to SPARS."""
+    from repro.core.naive import spars_ws_numpy
+
+    for seed in (0, 1):
+        a = random_powerlaw_csc(90, 4.0, seed=seed)
+        ref = spgemm_dense(a, a)
+        assert csc_equal(spars_ws_numpy(a, a), ref, rtol=1e-9)
+        # small-block path exercises multiple refills per lane
+        assert csc_equal(
+            spars_ws_numpy(a, a, b_min=8, b_max=8), ref, rtol=1e-9)
+
+
+def test_work_stealing_makespan_bound():
+    """List-scheduling bound: steps <= ceil(P/L) + max_op."""
+    import numpy as np
+    from repro.vm.schedule import _ws_makespan
+
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        ops = np.sort(rng.integers(1, 100, size=64))[::-1]
+        L = 16
+        steps, mean_active, refills = _ws_makespan(ops, L)
+        assert steps <= -(-int(ops.sum()) // L) + int(ops.max())
+        assert steps >= -(-int(ops.sum()) // L)
+        assert refills == len(ops)
+        assert 0 < mean_active <= L
