@@ -7,11 +7,26 @@ Generates a very sparse and a denser synthetic matrix, runs every algorithm
 against the dense oracle, and prints the calibrated vector-machine timing
 model's view — the paper's headline effect (hybrids win on sparse inputs,
 never lose on dense ones) in one screen.
+
+Plan/execute idiom (DESIGN.md §6) — when the sparsity pattern repeats
+(iterative A·A chains, static-weight serving), split the call:
+
+    from repro.core import plan_spgemm
+    plan = plan_spgemm(a, b, "h-hash-256/256")   # symbolic phase, once:
+                                                 # sort, block, size H, layouts
+    c1 = plan.execute(a_vals_1, b_vals_1)        # numeric phase per value set
+    c2 = plan.execute(a_vals_2, b_vals_2)        # ... pre-processing amortized
+
+``spgemm()`` does this transparently through a bounded LRU keyed on pattern
+fingerprints — repeated same-pattern calls hit the cache — but holding the
+plan explicitly skips even the fingerprint hash.  It pays off whenever one
+pattern is multiplied more than once; see benchmarks/plan_reuse.py for the
+measured overhead split.
 """
 
 import numpy as np
 
-from repro.core import preprocess, spgemm, spgemm_dense
+from repro.core import plan_spgemm, preprocess, spgemm, spgemm_dense
 from repro.sparse import random_uniform_csc
 from repro.sparse.format import csc_equal
 from repro.vm import (
@@ -42,6 +57,28 @@ def modeled_seconds(a, method):
         trace_hybrid(a, a, pre, accumulator=acc, c_nnz=cn))
 
 
+def plan_reuse_demo():
+    """The plan/execute split on a repeated-pattern workload."""
+    import time
+
+    a = random_uniform_csc(640, 4, seed=1)
+    t0 = time.perf_counter()
+    plan = plan_spgemm(a, a, "h-hash-256/256")
+    t_plan = time.perf_counter() - t0
+    rng = np.random.default_rng(0)
+    t_exec = 0.0
+    reps = 3
+    for _ in range(reps):  # same pattern, fresh values each round
+        vals = rng.normal(size=a.nnz)
+        t0 = time.perf_counter()
+        plan.execute(vals, vals)
+        t_exec += time.perf_counter() - t0
+    print(f"\n=== plan reuse (A 640x640, h-hash-256/256) ===")
+    print(f"symbolic plan (once):     {t_plan*1e3:7.2f}ms")
+    print(f"numeric execute (/call):  {t_exec/reps*1e3:7.2f}ms "
+          f"— pre-processing amortized over every same-pattern call")
+
+
 def main():
     for z, label in ((2, "very sparse (Z=2 nnz/col)"),
                      (10, "denser (Z=10 nnz/col)")):
@@ -64,6 +101,7 @@ def main():
                   f"{t*1e3:9.2f}ms {t_spa/t:6.2f}x")
     print("\n(model-time = calibrated 8-lane VL-256 vector machine; "
           "see EXPERIMENTS.md)")
+    plan_reuse_demo()
 
 
 if __name__ == "__main__":

@@ -21,7 +21,18 @@ from repro.core.naive import (
     spars_numpy,
 )
 from repro.core.reference import dense_product, spgemm_dense
-from repro.core.api import spgemm, ALGORITHMS
+from repro.core.planner import (
+    SpgemmPlan,
+    pattern_fingerprint,
+    plan_spgemm,
+)
+from repro.core.executor import execute as execute_plan
+from repro.core.api import (
+    ALGORITHMS,
+    plan_cache_clear,
+    plan_cache_info,
+    spgemm,
+)
 
 __all__ = [
     "VL_MAX",
@@ -44,6 +55,12 @@ __all__ = [
     "spars_numpy",
     "dense_product",
     "spgemm_dense",
+    "SpgemmPlan",
+    "pattern_fingerprint",
+    "plan_spgemm",
+    "execute_plan",
+    "plan_cache_clear",
+    "plan_cache_info",
     "spgemm",
     "ALGORITHMS",
 ]

@@ -1,33 +1,68 @@
-"""Public SpGEMM API: ``spgemm(A, B, method=...)``.
+"""Public SpGEMM API: ``spgemm(A, B, method=...)`` over cached plans.
 
 Methods mirror the paper's evaluated algorithms. ``backend="host"`` runs the
 faithful numpy executors; ``backend="pallas"`` runs the TPU kernels (interpret
 mode on CPU). Default parameters are the paper's best settings.
+
+``spgemm`` is a thin wrapper over the plan/execute split (DESIGN.md §6): it
+builds — or fetches from a bounded LRU keyed on pattern fingerprints — a
+:class:`~repro.core.planner.SpgemmPlan` and executes it against the operand
+values.  Repeated-pattern workloads can also hold a plan explicitly::
+
+    plan = plan_spgemm(a, b, "h-hash-256/256")
+    c1 = plan.execute(a_vals_1, b_vals_1)   # numeric phase only
+    c2 = spgemm(a2, b2, plan=plan)          # equivalent spelling
 """
 
 from __future__ import annotations
 
-import numpy as np
+from collections import OrderedDict
 
-from repro.core import naive
-from repro.core.analysis import preprocess
-from repro.core.expand import spgemm_expand
+from repro.core.planner import (
+    ALGORITHMS,
+    SpgemmPlan,
+    pattern_fingerprint,
+    plan_spgemm,
+    resolve_params,
+)
 from repro.sparse.format import CSC
 
-# method -> (callable kwargs); paper's Section 5.3 configurations
-ALGORITHMS = {
-    "spa": {},
-    "spars-16/64": dict(b_min=16, b_max=64),
-    "spars-40/40": dict(b_min=40, b_max=40),
-    "h-spa-16/64": dict(t=40, b_min=16, b_max=64, accumulator="spa"),
-    "h-spa-40/40": dict(t=40, b_min=40, b_max=40, accumulator="spa"),
-    "hash-32/256": dict(b_min=32, b_max=256),
-    "hash-256/256": dict(b_min=256, b_max=256),
-    "h-hash-32/256": dict(t=40, b_min=32, b_max=256, accumulator="hash"),
-    "h-hash-256/256": dict(t=40, b_min=256, b_max=256, accumulator="hash"),
-    "esc": {},
-    "expand": {},  # fast vectorized host executor (not a paper algorithm)
-}
+# bounded LRU of SpgemmPlan keyed by (a_fp, b_fp, method, backend, params)
+PLAN_CACHE_SIZE = 64
+_PLAN_CACHE: "OrderedDict[tuple, SpgemmPlan]" = OrderedDict()
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_clear() -> None:
+    """Drop all cached plans and reset hit/miss counters."""
+    _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def plan_cache_info() -> dict:
+    """Current cache occupancy and hit/miss counters."""
+    return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
+                max_size=PLAN_CACHE_SIZE)
+
+
+def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
+                 params: dict) -> SpgemmPlan:
+    key = (pattern_fingerprint(a), pattern_fingerprint(b), method, backend,
+           tuple(sorted(params.items())))
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _PLAN_CACHE.move_to_end(key)
+        _CACHE_STATS["hits"] += 1
+        return plan
+    _CACHE_STATS["misses"] += 1
+    plan = plan_spgemm(a, b, method, backend=backend,
+                       t=params.get("t"), b_min=params.get("b_min"),
+                       b_max=params.get("b_max"))
+    _PLAN_CACHE[key] = plan
+    while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
+        _PLAN_CACHE.popitem(last=False)
+    return plan
 
 
 def spgemm(
@@ -39,45 +74,26 @@ def spgemm(
     t: float | None = None,
     b_min: int | None = None,
     b_max: int | None = None,
+    plan: SpgemmPlan | None = None,
+    cache: bool = True,
 ) -> CSC:
     """Compute C = A @ B with one of the paper's algorithms.
 
-    Overriding t/b_min/b_max customizes the named method's defaults.
+    Overriding t/b_min/b_max customizes the named method's defaults.  With
+    ``plan`` the symbolic phase is skipped outright (method/backend arguments
+    are ignored — the plan carries its own); with ``cache=False`` the plan is
+    rebuilt from scratch, bypassing the LRU.
     """
+    if plan is not None:
+        return plan.execute(a, b)
     if method not in ALGORITHMS:
         raise ValueError(f"unknown method {method!r}; one of {list(ALGORITHMS)}")
-    params = dict(ALGORITHMS[method])
-    if t is not None:
-        params["t"] = t
-    if b_min is not None:
-        params["b_min"] = b_min
-    if b_max is not None:
-        params["b_max"] = b_max
-
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-
-        return kops.spgemm_pallas(a, b, method=method, **params)
-    if backend != "host":
+    if backend not in ("host", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
-
-    if method == "spa":
-        return naive.spa_numpy(a, b)
-    if method == "expand":
-        return spgemm_expand(a, b)
-    if method == "esc":
-        return naive.esc_numpy(a, b)
-    if method.startswith("spars"):
-        pre = preprocess(a, b, t=np.inf, b_min=params["b_min"],
-                         b_max=params["b_max"])
-        return naive.spars_numpy(a, b, pre)
-    if method.startswith("hash"):
-        pre = preprocess(a, b, t=np.inf, b_min=params["b_min"],
-                         b_max=params["b_max"])
-        return naive.hash_numpy(a, b, pre)
-    if method.startswith("h-"):
-        return naive.hybrid_numpy(
-            a, b, t=params["t"], b_min=params["b_min"], b_max=params["b_max"],
-            accumulator=params["accumulator"],
-        )
-    raise AssertionError(method)
+    params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
+    if cache:
+        p = _cached_plan(a, b, method, backend, params)
+    else:
+        p = plan_spgemm(a, b, method, backend=backend, t=params.get("t"),
+                        b_min=params.get("b_min"), b_max=params.get("b_max"))
+    return p.execute(a, b)

@@ -1,0 +1,114 @@
+"""Numeric SpGEMM execution of a cached symbolic plan (DESIGN.md §6).
+
+``execute(plan, a_values, b_values)`` runs only the value-dependent work of
+C = A @ B; every pattern-dependent decision (sorting, blocking, hash sizing,
+padded layouts, kernel groups) was made once by ``core.planner.plan_spgemm``.
+
+Host backend: binds the values to the planned patterns and dispatches to the
+faithful numpy executors, passing the plan's pre-computed ``Preprocess`` so
+nothing is re-analyzed.  Pallas backend: re-pads the values with the plan's
+gather indices (one vectorized gather per operand), launches one kernel per
+plan group via ``kernels.ops.run_{spa,spars,hash}``, and compacts each
+group's accumulator tile / hash tables straight into column-sliced CSC
+through ``sparse.format.CSCBuilder`` — the dense ``[m, n]`` sink of the
+pre-plan backend no longer exists; peak transient memory is one
+``[m, tile_cols]`` tile.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import naive
+from repro.core.expand import spgemm_expand
+from repro.core.planner import SpgemmPlan
+from repro.sparse.format import CSC, CSCBuilder, padded_values
+
+
+def execute(plan: SpgemmPlan, a_values, b_values, *,
+            interpret: bool = True, stats: dict | None = None) -> CSC:
+    """C = A @ B for new numeric values on the plan's sparsity patterns.
+
+    ``a_values``/``b_values``: CSC matrices or raw nnz-length value arrays.
+    Shapes and nnz are checked against the planned patterns (O(1)); a
+    same-shape same-nnz operand with a different pattern is the caller's
+    responsibility — full validation would cost the O(nnz) fingerprint this
+    path exists to avoid.  ``stats``, if given, is filled with execution
+    statistics (tile shapes, launch count) — tests use it to assert the
+    no-dense-intermediate guarantee.
+    """
+    plan.a.check_compatible(a_values)
+    plan.b.check_compatible(b_values)
+    if plan.backend == "host":
+        return _execute_host(plan, a_values, b_values)
+    return _execute_pallas(plan, a_values, b_values, interpret=interpret,
+                           stats=stats)
+
+
+def _execute_host(plan: SpgemmPlan, a_values, b_values) -> CSC:
+    a = plan.a.with_values(a_values)
+    b = plan.b.with_values(b_values)
+    method = plan.method
+    params = dict(plan.params)
+    if method == "spa":
+        return naive.spa_numpy(a, b)
+    if method == "expand":
+        return spgemm_expand(a, b)
+    if method == "esc":
+        return naive.esc_numpy(a, b)
+    if method.startswith("spars"):
+        return naive.spars_numpy(a, b, plan.pre)
+    if method.startswith("hash"):
+        return naive.hash_numpy(a, b, plan.pre)
+    if method.startswith("h-"):
+        return naive.hybrid_numpy(
+            a, b, t=params["t"], b_min=params["b_min"],
+            b_max=params["b_max"], accumulator=params["accumulator"],
+            pre=plan.pre,
+        )
+    raise AssertionError(method)
+
+
+def _execute_pallas(plan: SpgemmPlan, a_values, b_values, *,
+                    interpret: bool, stats: dict | None) -> CSC:
+    from repro.kernels import ops as kops
+
+    lay = plan.pallas
+    m, n = plan.shape
+    av = padded_values(_values(a_values), lay.a_gather,
+                       lay.a_mask).astype(np.float32, copy=False)
+    bv = padded_values(_values(b_values), lay.b_gather,
+                       lay.b_mask).astype(np.float32, copy=False)
+    a_arrs = kops.device_operand(lay.a_rows, av, lay.a_nnz)
+
+    builder = CSCBuilder((m, n), np.float32)
+    for g in lay.groups:
+        g_vals = np.where(g.valid[:, None], bv[g.sel], np.float32(0))
+        if g.kind == "spa":
+            tile = kops.run_spa(g, a_arrs, g_vals, m=m,
+                                block_cols=lay.block_cols,
+                                interpret=interpret)
+            builder.add_dense_tile(g.cols, tile)
+        elif g.kind == "spars":
+            tile = kops.run_spars(g, a_arrs, g_vals, m=m,
+                                  block_cols=lay.block_cols,
+                                  interpret=interpret)
+            builder.add_dense_tile(g.cols, tile)
+        elif g.kind == "hash":
+            keys, vals = kops.run_hash(g, a_arrs, g_vals, m=m,
+                                       block_cols=lay.block_cols,
+                                       interpret=interpret)
+            builder.add_hash_tables(g.cols, keys, vals)
+        else:
+            raise AssertionError(g.kind)
+    c = builder.build()
+    if stats is not None:
+        stats["tile_shapes"] = list(builder.tile_shapes)
+        stats["peak_tile_elems"] = builder.peak_tile_elems
+        stats["n_launches"] = len(lay.groups)
+        stats["result_shape"] = (m, n)
+    return c
+
+
+def _values(x) -> np.ndarray:
+    return np.asarray(x.values) if isinstance(x, CSC) else np.asarray(x)

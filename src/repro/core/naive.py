@@ -301,11 +301,16 @@ def esc_numpy(
 
 
 def hybrid_numpy(
-    a: CSC, b: CSC, *, t: float, b_min: int, b_max: int, accumulator: str = "spa"
+    a: CSC, b: CSC, *, t: float, b_min: int, b_max: int,
+    accumulator: str = "spa", pre: Preprocess | None = None,
 ) -> CSC:
     """H-SPA(t) / H-HASH(t): SPA on sorted columns while Op_j >= t, then the
-    blocked algorithm (SPARS or HASH) on the sparse tail."""
-    pre = preprocess(a, b, t=t, b_min=b_min, b_max=b_max)
+    blocked algorithm (SPARS or HASH) on the sparse tail.
+
+    ``pre``: pass a matching plan's pre-processing to skip re-analysis.
+    """
+    if pre is None:
+        pre = preprocess(a, b, t=t, b_min=b_min, b_max=b_max)
     head_cols = pre.perm[: pre.split]
     c_head = spa_numpy(a, b, columns=head_cols)
     if accumulator == "spa":

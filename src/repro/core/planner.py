@@ -1,0 +1,386 @@
+"""Symbolic SpGEMM planning: analyze a sparsity pattern once, execute often.
+
+The paper times its sort/block/hash-size pre-processing separately from the
+numeric kernel (Section 5.3); Nagasaka et al.'s hash SpGEMM makes that split
+structural — a *symbolic* phase reused whenever the pattern repeats, and a
+*numeric* phase that does the flops.  ``plan_spgemm`` runs every
+pattern-dependent step once — Op_j analysis, column sorting, blocking,
+hash-table sizing, padded kernel layouts, per-family column groups, per-block
+trip counts — and captures the result in an immutable :class:`SpgemmPlan`.
+Executing the plan against new numeric values (``core.executor``) performs
+only value work, so repeated-pattern workloads (graph analytics A·A chains,
+static-weight sparse FFNs, iterative solvers) amortize all host-side analysis
+(DESIGN.md §6).
+
+Plans are keyed by :func:`pattern_fingerprint`, which hashes only structure
+(shape, col_ptr, row_indices) — never values — so ``core.api``'s bounded LRU
+can transparently reuse plans across calls with identical patterns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analysis import Preprocess, preprocess
+from repro.sparse.format import CSC, _np, csc_pad_gather
+
+# method -> base kwargs; the paper's Section 5.3 configurations
+ALGORITHMS = {
+    "spa": {},
+    "spars-16/64": dict(b_min=16, b_max=64),
+    "spars-40/40": dict(b_min=40, b_max=40),
+    "h-spa-16/64": dict(t=40, b_min=16, b_max=64, accumulator="spa"),
+    "h-spa-40/40": dict(t=40, b_min=40, b_max=40, accumulator="spa"),
+    "hash-32/256": dict(b_min=32, b_max=256),
+    "hash-256/256": dict(b_min=256, b_max=256),
+    "h-hash-32/256": dict(t=40, b_min=32, b_max=256, accumulator="hash"),
+    "h-hash-256/256": dict(t=40, b_min=256, b_max=256, accumulator="hash"),
+    "esc": {},
+    "expand": {},  # fast vectorized host executor (not a paper algorithm)
+}
+
+# methods with no Pallas kernel family (host-only executors)
+HOST_ONLY = ("esc", "expand")
+
+
+def resolve_params(
+    method: str,
+    *,
+    t: float | None = None,
+    b_min: int | None = None,
+    b_max: int | None = None,
+) -> dict:
+    """Named-method defaults with optional overrides.
+
+    Unregistered ``family-x/y`` names (e.g. ``spars-128/128``, accepted by
+    ``spgemm_pallas`` since the seed) are parsed from the name itself.
+    """
+    params = dict(ALGORITHMS.get(method, ()))
+    if method not in ALGORITHMS:
+        if "-" in method:
+            bounds = method.rsplit("-", 1)[1]
+            # a trailing all-digit or x/y token is a bounds spec and must
+            # parse; anything else (e.g. a bare family prefix) is not
+            if "/" in bounds or bounds.isdigit():
+                try:
+                    bmin, bmax = (int(x) for x in bounds.split("/"))
+                except ValueError:
+                    raise ValueError(
+                        f"malformed block bounds in method {method!r}; "
+                        "expected 'family-bmin/bmax'") from None
+                params.setdefault("b_min", bmin)
+                params.setdefault("b_max", bmax)
+        if method.startswith("h-"):
+            params.setdefault("t", 40.0)
+            params.setdefault(
+                "accumulator", "hash" if "hash" in method else "spa")
+    if method.startswith(("spars", "hash", "h-")):
+        params.setdefault("b_min", 256)
+        params.setdefault("b_max", 256)
+    if t is not None:
+        params["t"] = t
+    if b_min is not None:
+        params["b_min"] = b_min
+    if b_max is not None:
+        params["b_max"] = b_max
+    return params
+
+
+def pattern_fingerprint(m: CSC) -> str:
+    """Hash of the sparsity pattern only (shape + col_ptr + row_indices).
+
+    Two CSC matrices with equal fingerprints can share one SpgemmPlan; their
+    values never enter the hash.
+    """
+    cp = _np(m.col_ptr)
+    ri = _np(m.row_indices)[: int(cp[-1])]
+    h = hashlib.blake2b(digest_size=16)
+    # raw bytes + dtype tags (no widening copies): fingerprints distinguish
+    # index dtypes, which is fine — Pattern.of normalizes to int32 anyway
+    h.update(f"{m.shape}:{cp.dtype}:{ri.dtype}".encode())
+    h.update(cp.tobytes())
+    h.update(ri.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    """Value-free view of one CSC operand: structure + fingerprint."""
+
+    row_indices: np.ndarray
+    col_ptr: np.ndarray
+    shape: Tuple[int, int]
+    fingerprint: str
+
+    @classmethod
+    def of(cls, m: CSC) -> "Pattern":
+        cp = _np(m.col_ptr)
+        return cls(
+            np.ascontiguousarray(_np(m.row_indices)[: int(cp[-1])], np.int32),
+            np.ascontiguousarray(cp, np.int32),
+            tuple(m.shape),
+            pattern_fingerprint(m),
+        )
+
+    def check_compatible(self, operand) -> None:
+        """Cheap O(1) compatibility check of an execute-time operand.
+
+        CSC operands must match the planned shape and nnz; raw value arrays
+        must cover the planned nnz.  A same-shape same-nnz CSC with a
+        *different* pattern is not detected (a full check would cost the
+        O(nnz) fingerprint the plan-reuse path exists to avoid).
+        """
+        if isinstance(operand, CSC):
+            if tuple(operand.shape) != self.shape:
+                raise ValueError(
+                    f"operand shape {tuple(operand.shape)} != planned "
+                    f"{self.shape}")
+            nnz = int(_np(operand.col_ptr)[-1])
+            if nnz != int(self.col_ptr[-1]):
+                raise ValueError(
+                    f"operand nnz {nnz} != planned {int(self.col_ptr[-1])} "
+                    "(sparsity pattern does not match this plan)")
+        elif np.asarray(operand).shape[0] < int(self.col_ptr[-1]):
+            raise ValueError(
+                f"need >= {int(self.col_ptr[-1])} values, "
+                f"got {np.asarray(operand).shape[0]}")
+
+    def with_values(self, values) -> CSC:
+        """Bind numeric values to this pattern (accepts a CSC or raw array)."""
+        self.check_compatible(values)
+        v = values.values if isinstance(values, CSC) else np.asarray(values)
+        return CSC(v, self.row_indices, self.col_ptr, self.shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGroup:
+    """One kernel launch of the Pallas execution schedule.
+
+    ``cols`` are the original B/C column ids this launch computes, in lane
+    order; ``sel``/``valid`` select-and-pad those columns out of the full
+    padded B layout (pad lanes point at column 0 with nnz forced to 0).
+    ``b_rows``/``b_nnz``/``steps`` are the pattern-static halves of the
+    padded group operand, stored as device arrays so re-executions pay no
+    host-to-device copy; only values are re-gathered per execution.
+    """
+
+    kind: str                 # "spa" | "spars" | "hash"
+    cols: np.ndarray          # [n_real] original column ids
+    sel: np.ndarray           # [n_pad] gather index into the B layout
+    valid: np.ndarray         # [n_pad] bool, False for pad lanes
+    b_rows: jnp.ndarray       # [n_pad, zb] int32 (device)
+    b_nnz: jnp.ndarray        # [n_pad] int32 (device)
+    steps: Optional[jnp.ndarray] = None  # [n_pad/block_cols] trip counts
+    h: Optional[int] = None              # hash-table size (kind == "hash")
+
+    @property
+    def n_real(self) -> int:
+        return len(self.cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasLayout:
+    """Everything ``spgemm_pallas`` used to recompute per call, pattern-only.
+
+    The A operand rides whole into every launch (as in the seed kernels); B
+    is pre-sliced per group.  ``*_gather``/``*_mask`` re-pad fresh numeric
+    values with one vectorized gather each.
+    """
+
+    block_cols: int
+    tile_cols: int
+    a_rows: jnp.ndarray       # [n_a, za] int32 (device)
+    a_nnz: jnp.ndarray        # [n_a] int32 (device)
+    a_gather: np.ndarray
+    a_mask: np.ndarray
+    b_gather: np.ndarray
+    b_mask: np.ndarray
+    groups: Tuple[KernelGroup, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpgemmPlan:
+    """Immutable symbolic plan for C = A @ B with one algorithm/backend.
+
+    Built once per sparsity pattern by :func:`plan_spgemm`; execute with
+    ``plan.execute(a_values, b_values)`` (CSC operands or raw value arrays
+    aligned with the planned patterns) or ``spgemm(a, b, plan=plan)``.
+    """
+
+    method: str
+    backend: str
+    params: tuple             # sorted (key, value) pairs, hashable
+    a: Pattern
+    b: Pattern
+    pre: Optional[Preprocess]          # host blocking analysis (if any)
+    pallas: Optional[PallasLayout]     # kernel layouts (pallas backend)
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.a.shape[0], self.b.shape[1])
+
+    @property
+    def cache_key(self) -> tuple:
+        return (self.a.fingerprint, self.b.fingerprint, self.method,
+                self.backend, self.params)
+
+    def execute(self, a_values, b_values, *, interpret: bool = True,
+                stats: dict | None = None) -> CSC:
+        """Numeric phase only: C for new values on the planned patterns."""
+        from repro.core.executor import execute
+
+        return execute(self, a_values, b_values, interpret=interpret,
+                       stats=stats)
+
+
+def _freeze(params: dict) -> tuple:
+    return tuple(sorted(params.items()))
+
+
+def plan_spgemm(
+    a: CSC,
+    b: CSC,
+    method: str = "h-hash-256/256",
+    *,
+    backend: str = "host",
+    t: float | None = None,
+    b_min: int | None = None,
+    b_max: int | None = None,
+    block_cols: int = 128,
+    tile_cols: int | None = None,
+) -> SpgemmPlan:
+    """Build the symbolic plan for C = A @ B (pattern-dependent work only).
+
+    ``block_cols`` is the Pallas lane-block width; ``tile_cols`` bounds how
+    many C columns one kernel launch materializes (defaults to
+    ``block_cols``), which caps the transient accumulator tile at
+    ``[m, tile_cols]`` — the dense ``[m, n]`` sink of the pre-plan backend is
+    gone.
+    """
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    if method not in ALGORITHMS and not method.startswith(
+            ("spars", "hash", "h-")):
+        raise ValueError(
+            f"unknown method {method!r}; one of {list(ALGORITHMS)} or a "
+            "'spars-*/hash-*/h-*' family name")
+    params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
+    a_pat, b_pat = Pattern.of(a), Pattern.of(b)
+
+    if backend == "host":
+        pre = None
+        if method.startswith(("spars", "hash")):
+            pre = preprocess(a, b, t=np.inf, b_min=params["b_min"],
+                             b_max=params["b_max"])
+        elif method.startswith("h-"):
+            pre = preprocess(a, b, t=params["t"], b_min=params["b_min"],
+                             b_max=params["b_max"])
+        return SpgemmPlan(method, "host", _freeze(params), a_pat, b_pat,
+                          pre, None)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    if method in HOST_ONLY:
+        raise ValueError(
+            f"method {method!r} has no Pallas kernel family (host-only)")
+    pre, layout = _plan_pallas(a, b, method, params, block_cols, tile_cols)
+    return SpgemmPlan(method, "pallas", _freeze(params), a_pat, b_pat,
+                      pre, layout)
+
+
+# ---------------------------------------------------------------------------
+# Pallas schedule construction (was recomputed on every spgemm_pallas call)
+# ---------------------------------------------------------------------------
+
+
+def _plan_pallas(a, b, method, params, block_cols, tile_cols):
+    if tile_cols is None:
+        tile_cols = block_cols
+    if tile_cols % block_cols:
+        raise ValueError(
+            f"tile_cols={tile_cols} not a multiple of block_cols={block_cols}")
+    n = b.n_cols
+    a_rows, a_gather, a_mask, a_nnz = csc_pad_gather(a)
+    b_rows, b_gather, b_mask, b_nnz = csc_pad_gather(b)
+    a_nnz = a_nnz.astype(np.int32)
+    b_nnz = b_nnz.astype(np.int32)
+
+    groups: list[KernelGroup] = []
+
+    def add_group(kind, cols, steps=None, h=None):
+        cols = np.asarray(cols, np.int64)
+        n_real = len(cols)
+        if n_real == 0:
+            return
+        n_pad = -(-n_real // block_cols) * block_cols
+        sel = np.zeros(n_pad, np.int64)
+        sel[:n_real] = cols
+        valid = np.zeros(n_pad, bool)
+        valid[:n_real] = True
+        g_rows = np.where(valid[:, None], b_rows[sel], 0).astype(np.int32)
+        g_nnz = np.where(valid, b_nnz[sel], 0).astype(np.int32)
+        if steps is not None:
+            steps = np.asarray(steps, np.int32)
+            assert len(steps) == n_pad // block_cols, (len(steps), n_pad)
+            steps = jnp.asarray(steps)
+        groups.append(KernelGroup(kind, cols, sel, valid,
+                                  jnp.asarray(g_rows), jnp.asarray(g_nnz),
+                                  steps, h))
+
+    # the kernels process each lane independently, so splitting a family into
+    # tile_cols-wide launches changes peak memory, never values
+    if method == "spa":
+        pre = None
+        head = np.arange(n)
+    else:
+        tt = params["t"] if method.startswith("h-") else np.inf
+        # the lock-step kernels use fixed-width lane blocks: the blocking
+        # bounds collapse to block_cols (the named method only selects the
+        # family), exactly as the seed backend did
+        pre = preprocess(a, b, t=tt, b_min=block_cols, b_max=block_cols)
+        head = pre.perm[: pre.split]
+
+    for c0 in range(0, len(head), tile_cols):
+        add_group("spa", head[c0: c0 + tile_cols])
+
+    if method != "spa" and pre.blocks.n_blocks:
+        fam = "hash" if "hash" in method else "spars"
+        starts, sizes = pre.blocks.starts, pre.blocks.sizes
+        n_blocks = pre.blocks.n_blocks
+        # per-block trip count = the block head's Op_j (columns are sorted
+        # non-increasing, so the head is the block max)
+        steps_all = pre.ops_sorted[starts].astype(np.int32)
+        if fam == "hash":
+            # blocks with equal table size H form contiguous runs (H shrinks
+            # monotonically along sorted blocks, Section 3.2)
+            hs = pre.hash_sizes
+            run_bounds = np.concatenate(
+                ([0], np.nonzero(np.diff(hs))[0] + 1, [n_blocks]))
+            runs = list(zip(run_bounds[:-1], run_bounds[1:]))
+        else:
+            runs = [(0, n_blocks)]
+        blocks_per_tile = tile_cols // block_cols
+        for r0, r1 in runs:
+            h = int(pre.hash_sizes[r0]) if fam == "hash" else None
+            for i0 in range(r0, r1, blocks_per_tile):
+                i1 = min(i0 + blocks_per_tile, r1)
+                lo = int(starts[i0])
+                hi = int(starts[i1 - 1] + sizes[i1 - 1])
+                add_group(fam, pre.perm[lo:hi], steps=steps_all[i0:i1], h=h)
+
+    layout = PallasLayout(
+        block_cols=block_cols,
+        tile_cols=tile_cols,
+        a_rows=jnp.asarray(a_rows),
+        a_nnz=jnp.asarray(a_nnz),
+        a_gather=a_gather,
+        a_mask=a_mask,
+        b_gather=b_gather,
+        b_mask=b_mask,
+        groups=tuple(groups),
+    )
+    return pre, layout

@@ -1,11 +1,16 @@
 """Host-facing jit'd wrappers around the Pallas kernels.
 
-``spgemm_pallas`` is the device backend of ``core.api.spgemm``: it performs
-the paper's host-side pre-processing (sort, block, size tables), pads CSC
-operands into kernel layouts, launches the right kernel per block group, and
-compacts results back to CSC. One pallas_call per distinct hash-table size H
-realizes the paper's dynamic table shrinking as compile-time VMEM tile
-selection (DESIGN.md §2).
+``run_spa``/``run_spars``/``run_hash`` each launch one kernel for a single
+plan :class:`~repro.core.planner.KernelGroup` — the per-family column
+grouping, padding, trip counts and hash sizes all come pre-computed from the
+plan instead of being re-derived per call.  One launch per distinct hash
+table size H realizes the paper's dynamic table shrinking as compile-time
+VMEM tile selection (DESIGN.md §2); results are compacted per group straight
+into CSC by the executor, so no ``[m, n]`` dense intermediate ever exists
+(DESIGN.md §6).
+
+``spgemm_pallas`` is the device backend of ``core.api.spgemm``: a thin
+plan-then-execute wrapper kept for direct use (tests, notebooks).
 """
 
 from __future__ import annotations
@@ -14,136 +19,76 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core.analysis import hash_table_size, preprocess
-from repro.sparse.format import CSC, csc_from_dense, csc_to_padded_columns
-from repro.sparse.stats import ops_per_column
+from repro.sparse.format import CSC
 from repro.kernels.spa import spa_spgemm
 from repro.kernels.spars import spars_spgemm
 from repro.kernels.hash_spgemm import hash_spgemm
-from repro.kernels.ref import hash_tables_to_dense
 
 
-def _pad_cols(rows, vals, nnz, block_cols):
-    """Pad the column count to a multiple of block_cols with empty columns."""
-    n = rows.shape[0]
-    n_pad = -(-n // block_cols) * block_cols
-    if n_pad == n:
-        return rows, vals, nnz, n
-    pr = np.zeros((n_pad, rows.shape[1]), rows.dtype)
-    pv = np.zeros((n_pad, vals.shape[1]), vals.dtype)
-    pn = np.zeros(n_pad, nnz.dtype)
-    pr[:n], pv[:n], pn[:n] = rows, vals, nnz
-    return pr, pv, pn, n
+def device_operand(rows: np.ndarray, vals: np.ndarray, nnz: np.ndarray):
+    """Padded-column operand triple as device arrays (shared by all groups)."""
+    return (jnp.asarray(rows), jnp.asarray(vals), jnp.asarray(nnz))
 
 
-def _padded(m: CSC):
-    rows, vals, nnz = csc_to_padded_columns(m)
-    return rows.astype(np.int32), vals.astype(np.float32), nnz.astype(np.int32)
+def run_spa(group, a_arrs, b_vals, *, m: int, block_cols: int,
+            interpret: bool = True) -> np.ndarray:
+    """Dense [m, n_real] tile for one SPA plan group."""
+    a_rows, a_vals, a_nnz = a_arrs
+    out = spa_spgemm(
+        a_rows, a_vals, a_nnz,
+        jnp.asarray(group.b_rows), jnp.asarray(b_vals),
+        jnp.asarray(group.b_nnz),
+        m=m, block_cols=block_cols, interpret=interpret)
+    return np.asarray(out)[:, : group.n_real]
 
 
-def _select_cols(arrs, cols):
-    return tuple(a[cols] for a in arrs)
+def run_spars(group, a_arrs, b_vals, *, m: int, block_cols: int,
+              interpret: bool = True) -> np.ndarray:
+    """Dense [m, n_real] tile for one SPARS plan group (plan-provided steps)."""
+    a_rows, a_vals, a_nnz = a_arrs
+    out, _flags = spars_spgemm(
+        a_rows, a_vals, a_nnz,
+        jnp.asarray(group.b_rows), jnp.asarray(b_vals),
+        jnp.asarray(group.b_nnz), jnp.asarray(group.steps),
+        m=m, block_cols=block_cols, interpret=interpret)
+    return np.asarray(out)[:, : group.n_real]
 
 
-def _steps_per_block(ops_sel: np.ndarray, block_cols: int) -> np.ndarray:
-    nb = len(ops_sel) // block_cols
-    if nb == 0:
-        return np.zeros(0, np.int32)
-    return ops_sel.reshape(nb, block_cols).max(axis=1).astype(np.int32)
+def run_hash(group, a_arrs, b_vals, *, m: int, block_cols: int,
+             interpret: bool = True):
+    """Hash tables (keys, vals) [H, n_real] for one HASH plan group."""
+    a_rows, a_vals, a_nnz = a_arrs
+    keys, vals = hash_spgemm(
+        a_rows, a_vals, a_nnz,
+        jnp.asarray(group.b_rows), jnp.asarray(b_vals),
+        jnp.asarray(group.b_nnz), jnp.asarray(group.steps),
+        m=m, h=int(group.h), block_cols=block_cols, interpret=interpret)
+    return (np.asarray(keys)[:, : group.n_real],
+            np.asarray(vals)[:, : group.n_real])
 
 
 def spgemm_pallas(
     a: CSC, b: CSC, method: str = "spa", *, t: float = 40.0,
     b_min: int | None = None, b_max: int | None = None,
     accumulator: str | None = None, block_cols: int = 128,
-    interpret: bool = True,
+    tile_cols: int | None = None, interpret: bool = True,
+    plan=None,
 ) -> CSC:
-    """C = A @ B on the Pallas backend.
+    """C = A @ B on the Pallas backend (plan once, execute once).
 
     The lock-step kernels use fixed-width column blocks (= ``block_cols``), so
     the b_min/b_max of the named method select the *family*; the dense-tile
     width is the kernel block. Hybrids split at ``t`` exactly as the paper.
+    Pass a cached ``plan`` (from ``core.plan_spgemm``) to skip the symbolic
+    phase entirely.
     """
-    m = a.n_rows
-    n = b.n_cols
-    a_rows, a_vals, a_nnz = _padded(a)
-    b_rows, b_vals, b_nnz = _padded(b)
-    dense = np.zeros((m, n), np.float32)
+    del accumulator  # family is selected by the method name
+    if plan is None:
+        from repro.core.planner import plan_spgemm
 
-    fam = method.split("-")[0] if not method.startswith("h-") else "hybrid"
-    if method.startswith("h-"):
-        acc = accumulator or method.split("-")[1].split("/")[0].split("-")[0]
-        acc = "hash" if "hash" in method else "spa_blocked"
-    ops = ops_per_column(a, b)
-    order = np.argsort(-ops, kind="stable")
-    ops_sorted = ops[order]
+        plan = plan_spgemm(a, b, method, backend="pallas", t=t, b_min=b_min,
+                           b_max=b_max, block_cols=block_cols,
+                           tile_cols=tile_cols)
+    from repro.core.executor import execute
 
-    def run_spa(col_ids):
-        if len(col_ids) == 0:
-            return
-        br, bv, bn = _select_cols((b_rows, b_vals, b_nnz), col_ids)
-        br, bv, bn, real = _pad_cols(br, bv, bn, block_cols)
-        out = np.asarray(spa_spgemm(
-            jnp.asarray(a_rows), jnp.asarray(a_vals), jnp.asarray(a_nnz),
-            jnp.asarray(br), jnp.asarray(bv), jnp.asarray(bn),
-            m=m, block_cols=block_cols, interpret=interpret))
-        dense[:, col_ids] = out[:, :real]
-
-    def run_spars(col_ids):
-        if len(col_ids) == 0:
-            return
-        br, bv, bn = _select_cols((b_rows, b_vals, b_nnz), col_ids)
-        br, bv, bn, real = _pad_cols(br, bv, bn, block_cols)
-        steps = _steps_per_block(
-            np.pad(ops[col_ids], (0, len(bn) - real)), block_cols)
-        out, _flags = spars_spgemm(
-            jnp.asarray(a_rows), jnp.asarray(a_vals), jnp.asarray(a_nnz),
-            jnp.asarray(br), jnp.asarray(bv), jnp.asarray(bn),
-            jnp.asarray(steps),
-            m=m, block_cols=block_cols, interpret=interpret)
-        dense[:, col_ids] = np.asarray(out)[:, :real]
-
-    def run_hash(col_ids):
-        if len(col_ids) == 0:
-            return
-        # group blocks by their (monotone shrinking) table size H
-        ops_sel = ops[col_ids]
-        n_pad = -(-len(col_ids) // block_cols) * block_cols
-        ops_pad = np.pad(ops_sel, (0, n_pad - len(col_ids)))
-        steps_all = _steps_per_block(ops_pad, block_cols)
-        hs = np.asarray([hash_table_size(int(s)) for s in steps_all])
-        for H in np.unique(hs):
-            sel_blocks = np.nonzero(hs == H)[0]
-            cols_grp, keep = [], []
-            for bi in sel_blocks:
-                lo, hi = bi * block_cols, (bi + 1) * block_cols
-                grp = np.arange(lo, min(hi, len(col_ids)))
-                cols_grp.append(col_ids[grp])
-                keep.append(len(grp))
-            cat = np.concatenate(cols_grp)
-            br, bv, bn = _select_cols((b_rows, b_vals, b_nnz), cat)
-            br, bv, bn, real = _pad_cols(br, bv, bn, block_cols)
-            steps = np.asarray(
-                [steps_all[bi] for bi in sel_blocks], np.int32)
-            keys, vals = hash_spgemm(
-                jnp.asarray(a_rows), jnp.asarray(a_vals), jnp.asarray(a_nnz),
-                jnp.asarray(br), jnp.asarray(bv), jnp.asarray(bn),
-                jnp.asarray(steps),
-                m=m, h=int(H), block_cols=block_cols, interpret=interpret)
-            cols_dense = np.asarray(hash_tables_to_dense(keys, vals, m))
-            dense[:, cat] = cols_dense[:, :real]
-
-    if method == "spa":
-        run_spa(np.arange(n))
-    elif method.startswith("spars"):
-        run_spars(order)
-    elif method.startswith("hash"):
-        run_hash(order)
-    elif method.startswith("h-"):
-        split = int(np.searchsorted(-ops_sorted, -t, side="right"))
-        run_spa(order[:split])
-        (run_hash if "hash" in method else run_spars)(order[split:])
-    else:
-        raise ValueError(method)
-
-    return csc_from_dense(dense)
+    return execute(plan, a, b, interpret=interpret)

@@ -12,7 +12,8 @@ from L2 to VMEM). Per B non-zero we
 
 Operands are padded-column views (``sparse.csc_to_padded_columns``). Output is
 the dense accumulator block; compaction to CSC is the caller's separate store
-phase (``ops.dense_to_csc``), mirroring the paper's line-11 "store as sparse".
+phase (``sparse.format.CSCBuilder.add_dense_tile``), mirroring the paper's
+line-11 "store as sparse".
 """
 
 from __future__ import annotations

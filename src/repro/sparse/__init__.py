@@ -9,12 +9,15 @@ from repro.sparse.format import (
     CSC,
     CSR,
     COO,
+    CSCBuilder,
     csc_from_dense,
     csc_to_dense,
     csc_to_csr,
     csr_to_csc,
     csc_from_coo,
+    csc_pad_gather,
     csc_to_padded_columns,
+    padded_values,
     validate_csc,
 )
 from repro.sparse.generate import (
@@ -44,7 +47,10 @@ __all__ = [
     "csc_to_csr",
     "csr_to_csc",
     "csc_from_coo",
+    "csc_pad_gather",
     "csc_to_padded_columns",
+    "padded_values",
+    "CSCBuilder",
     "validate_csc",
     "random_uniform_csc",
     "random_density_csc",

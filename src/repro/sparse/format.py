@@ -231,11 +231,15 @@ def transpose_csc(m: CSC) -> CSC:
     return CSC(r.values, r.col_indices, r.row_ptr, (m.shape[1], m.shape[0]))
 
 
-def csc_to_padded_columns(m: CSC, pad_to: int | None = None):
-    """Ragged→rectangular view for lock-step kernels.
+def csc_pad_gather(m: CSC, pad_to: int | None = None):
+    """Pattern-only padded-column layout (the symbolic half of padding).
 
-    Returns (row_idx [n_cols, pad_to] int32, vals [n_cols, pad_to], nnz [n_cols]).
-    Padding slots have row_idx == 0 and vals == 0 (masked by nnz downstream).
+    Returns ``(rows [n_cols, Z] int32, gather [n_cols, Z] int64,
+    mask [n_cols, Z] bool, nnz [n_cols] int32)``.  ``gather``/``mask`` turn any
+    values vector with this sparsity pattern into its padded rectangular view
+    via ``padded_values`` — a single vectorized gather, with no per-column
+    Python loop — so a cached plan can re-pad new numeric values cheaply
+    (DESIGN.md §6).
     """
     cp = _np(m.col_ptr)
     nnz_col = np.diff(cp).astype(np.int32)
@@ -244,15 +248,116 @@ def csc_to_padded_columns(m: CSC, pad_to: int | None = None):
         if pad_to < width:
             raise ValueError(f"pad_to={pad_to} < max column nnz {width}")
         width = pad_to
-    rows = np.zeros((m.n_cols, width), np.int32)
-    vals = np.zeros((m.n_cols, width), _np(m.values).dtype)
+    z = np.arange(width)
+    mask = z[None, :] < nnz_col[:, None]
+    gather = np.where(mask, cp[:-1, None].astype(np.int64) + z[None, :], 0)
     rr = _np(m.row_indices)
-    vv = _np(m.values)
-    for j in range(m.n_cols):
-        lo, hi = cp[j], cp[j + 1]
-        rows[j, : hi - lo] = rr[lo:hi]
-        vals[j, : hi - lo] = vv[lo:hi]
-    return rows, vals, nnz_col
+    if rr.size:
+        rows = np.where(mask, rr[gather], 0).astype(np.int32)
+    else:
+        rows = np.zeros(gather.shape, np.int32)
+    return rows, gather, mask, nnz_col
+
+
+def padded_values(values, gather, mask):
+    """Numeric half of padding: values -> padded [n_cols, Z] (zeros in pads)."""
+    v = _np(values)
+    if v.size == 0:
+        return np.zeros(gather.shape, v.dtype)
+    return np.where(mask, v[gather], 0).astype(v.dtype, copy=False)
+
+
+def csc_to_padded_columns(m: CSC, pad_to: int | None = None):
+    """Ragged→rectangular view for lock-step kernels.
+
+    Returns (row_idx [n_cols, pad_to] int32, vals [n_cols, pad_to], nnz [n_cols]).
+    Padding slots have row_idx == 0 and vals == 0 (masked by nnz downstream).
+    """
+    rows, gather, mask, nnz_col = csc_pad_gather(m, pad_to)
+    return rows, padded_values(m.values, gather, mask), nnz_col
+
+
+class CSCBuilder:
+    """Incremental column-sliced CSC assembly from per-group kernel outputs.
+
+    The SpGEMM executors produce results group by group — dense ``[m, L]``
+    accumulator tiles (SPA/SPARS) or ``[H, L]`` hash tables (HASH), with
+    ``L`` bounded by the plan's tile width.  The builder compacts each group
+    straight into per-column (rows, values) slices and assembles the final
+    CSC once, so an ``[m, n]`` dense intermediate never exists; peak
+    transient memory is one group tile (DESIGN.md §6).  ``tile_shapes``
+    records every tile seen so tests can assert the no-dense guarantee.
+    """
+
+    def __init__(self, shape, dtype=np.float32):
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self._rows = [None] * self.shape[1]
+        self._vals = [None] * self.shape[1]
+        self.tile_shapes: list = []  # (kind, (rows, cols)) per compacted tile
+
+    @property
+    def peak_tile_elems(self) -> int:
+        """Largest intermediate tile compacted so far, in elements."""
+        return max((s[0] * s[1] for _, s in self.tile_shapes), default=0)
+
+    def _set_columns(self, col_ids, rows, vals, offsets):
+        for i, j in enumerate(col_ids):
+            j = int(j)
+            if self._rows[j] is not None:
+                raise ValueError(f"column {j} assembled twice")
+            lo, hi = offsets[i], offsets[i + 1]
+            self._rows[j] = rows[lo:hi]
+            self._vals[j] = vals[lo:hi]
+
+    def add_dense_tile(self, col_ids, tile) -> None:
+        """Compact a dense [m, L] accumulator tile; tile[:, i] is C column
+        col_ids[i].  Matches ``csc_from_dense`` semantics per column
+        (rows ascending, exact zeros dropped)."""
+        t = _np(tile)
+        if t.shape[1] != len(col_ids):
+            raise ValueError(
+                f"tile has {t.shape[1]} columns for {len(col_ids)} col_ids")
+        self.tile_shapes.append(("dense", t.shape))
+        present = np.abs(t) > 0
+        counts = present.sum(axis=0)
+        nz_c, nz_r = np.nonzero(present.T)  # column-major: rows ascending/col
+        vals = t[nz_r, nz_c].astype(self.dtype)
+        offsets = np.concatenate(([0], np.cumsum(counts)))
+        self._set_columns(col_ids, nz_r.astype(np.int32), vals, offsets)
+
+    def add_hash_tables(self, col_ids, keys, vals) -> None:
+        """Compact per-lane hash tables keys/vals [H, L]; lane i holds C
+        column col_ids[i].  Keys are row indices (-1 = empty slot); zero
+        values are dropped exactly as densify-then-compact would."""
+        kt = _np(keys).T  # [L, H]
+        vt = _np(vals).T
+        if kt.shape[0] != len(col_ids):
+            raise ValueError(
+                f"tables hold {kt.shape[0]} lanes for {len(col_ids)} col_ids")
+        self.tile_shapes.append(("hash", _np(keys).shape))
+        occupied = (kt >= 0) & (np.abs(vt) > 0)
+        counts = occupied.sum(axis=1)
+        nz_l, nz_h = np.nonzero(occupied)
+        r = kt[nz_l, nz_h].astype(np.int64)
+        v = vt[nz_l, nz_h].astype(self.dtype)
+        order = np.lexsort((r, nz_l))  # per lane, rows ascending
+        offsets = np.concatenate(([0], np.cumsum(counts)))
+        self._set_columns(col_ids, r[order].astype(np.int32), v[order],
+                          offsets)
+
+    def build(self) -> CSC:
+        m, n = self.shape
+        empty_r = np.zeros(0, np.int32)
+        empty_v = np.zeros(0, self.dtype)
+        rows_l = [r if r is not None else empty_r for r in self._rows]
+        vals_l = [v if v is not None else empty_v for v in self._vals]
+        col_ptr = np.zeros(n + 1, np.int32)
+        np.cumsum([len(r) for r in rows_l], out=col_ptr[1:])
+        rows = np.concatenate(rows_l) if n else empty_r
+        vals = np.concatenate(vals_l) if n else empty_v
+        return CSC(vals.astype(self.dtype), rows.astype(np.int32), col_ptr,
+                   (m, n))
 
 
 def validate_csc(m: CSC, *, sorted_rows: bool = False) -> None:

@@ -2,6 +2,9 @@
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
