@@ -39,12 +39,16 @@ def count_triangles(adj):
     return a
 
 
-def weighted_walk_reuse(a, trials=5, method="h-hash-256/256"):
+def weighted_walk_reuse(a, trials=5, method="spa"):
     """Re-execute A@A as edge weights change (same pattern every step).
 
     Typical of dynamic graph analytics: the topology is static, the weights
     (traffic, affinity, conductance) are updated each tick.  One symbolic
-    plan serves all ticks; execute() performs only the numeric phase.
+    plan serves all ticks, and the ticks themselves run as one *batched*
+    numeric execution — all weight sets through a single plan traversal
+    (``execute_batched``, DESIGN.md §7) instead of a per-tick Python loop.
+    SPA's host accumulation is vectorized over the value axis, so the
+    batched pass costs roughly one tick's structure walk for all ticks.
     """
     print(f"\nplan reuse: weighted 2-walks, {trials} weight updates, "
           f"method={method}")
@@ -52,26 +56,33 @@ def weighted_walk_reuse(a, trials=5, method="h-hash-256/256"):
     plan = plan_spgemm(a, a, method)      # symbolic: sort/block/size, once
     t_plan = time.perf_counter() - t0
     rng = np.random.default_rng(1)
-    t_exec = 0.0
-    for trial in range(trials):
-        w = rng.uniform(0.5, 1.5, size=a.nnz)
+    weights = rng.uniform(0.5, 1.5, size=(trials, a.nnz))  # one tick per row
+    t0 = time.perf_counter()
+    cs = plan.execute_batched(weights, weights)   # numeric only, one pass
+    t_batch = time.perf_counter() - t0
+    t_loop = 0.0
+    for trial, w in enumerate(weights):
         aw = CSC(w, a.row_indices, a.col_ptr, a.shape)
         t0 = time.perf_counter()
-        c = plan.execute(w, w)            # numeric only
-        t_exec += time.perf_counter() - t0
+        c = plan.execute(w, w)            # the old per-tick inner loop
+        t_loop += time.perf_counter() - t0
         c_fresh = spgemm(aw, aw, method=method, cache=False)
-        same = (
-            np.array_equal(np.asarray(c.col_ptr), np.asarray(c_fresh.col_ptr))
-            and np.allclose(np.asarray(c.values)[: c.nnz],
-                            np.asarray(c_fresh.values)[: c_fresh.nnz])
-        )
-        assert same, f"trial {trial}: reuse diverged from fresh call"
-    print(f"  symbolic plan, paid once:   {t_plan*1e3:7.2f}ms")
-    print(f"  numeric execute, per call:  {t_exec/trials*1e3:7.2f}ms "
-          f"(matches a fresh spgemm() bit for bit)")
+        for other, label in ((c_fresh, "fresh call"),
+                             (cs[trial], "batched execution")):
+            same = (
+                np.array_equal(np.asarray(c.col_ptr),
+                               np.asarray(other.col_ptr))
+                and np.array_equal(np.asarray(c.values)[: c.nnz],
+                                   np.asarray(other.values)[: other.nnz])
+            )
+            assert same, f"trial {trial}: {label} diverged from execute()"
+    print(f"  symbolic plan, paid once:     {t_plan*1e3:7.2f}ms")
+    print(f"  looped execute, per tick:     {t_loop/trials*1e3:7.2f}ms")
+    print(f"  batched execute, per tick:    {t_batch/trials*1e3:7.2f}ms "
+          f"({t_loop/max(t_batch, 1e-9):.1f}x; matches the loop bit for bit)")
     print(f"  planning fresh each call would add {t_plan*(trials-1)*1e3:.2f}ms"
-          f" over {trials} updates; see benchmarks/plan_reuse.py for the"
-          " overhead split at scale")
+          f" over {trials} updates; see benchmarks/batched.py for batched"
+          " throughput at scale")
 
 
 def main():

@@ -27,11 +27,13 @@ from repro.core.planner import (
     plan_spgemm,
 )
 from repro.core.executor import execute as execute_plan
+from repro.core.executor import execute_batched as execute_plan_batched
 from repro.core.api import (
     ALGORITHMS,
     plan_cache_clear,
     plan_cache_info,
     spgemm,
+    spgemm_batched,
 )
 
 __all__ = [
@@ -59,8 +61,10 @@ __all__ = [
     "pattern_fingerprint",
     "plan_spgemm",
     "execute_plan",
+    "execute_plan_batched",
     "plan_cache_clear",
     "plan_cache_info",
     "spgemm",
+    "spgemm_batched",
     "ALGORITHMS",
 ]

@@ -25,7 +25,7 @@ from repro.core.planner import (
     plan_spgemm,
     resolve_params,
 )
-from repro.sparse.format import CSC
+from repro.sparse.format import BatchedCSC, CSC
 
 # bounded LRU of SpgemmPlan keyed by (a_fp, b_fp, method, backend, params)
 PLAN_CACHE_SIZE = 64
@@ -76,16 +76,20 @@ def spgemm(
     b_max: int | None = None,
     plan: SpgemmPlan | None = None,
     cache: bool = True,
+    validate: str | None = None,
 ) -> CSC:
     """Compute C = A @ B with one of the paper's algorithms.
 
     Overriding t/b_min/b_max customizes the named method's defaults.  With
     ``plan`` the symbolic phase is skipped outright (method/backend arguments
     are ignored — the plan carries its own); with ``cache=False`` the plan is
-    rebuilt from scratch, bypassing the LRU.
+    rebuilt from scratch, bypassing the LRU.  ``validate="fingerprint"``
+    re-hashes the operand structure against the plan (O(nnz)) instead of the
+    default O(1) shape/nnz check — useful when reusing a held plan against
+    operands of uncertain provenance.
     """
     if plan is not None:
-        return plan.execute(a, b)
+        return plan.execute(a, b, validate=validate)
     if method not in ALGORITHMS:
         raise ValueError(f"unknown method {method!r}; one of {list(ALGORITHMS)}")
     if backend not in ("host", "pallas"):
@@ -97,3 +101,52 @@ def spgemm(
         p = plan_spgemm(a, b, method, backend=backend, t=params.get("t"),
                         b_min=params.get("b_min"), b_max=params.get("b_max"))
     return p.execute(a, b)
+
+
+def spgemm_batched(
+    a: BatchedCSC,
+    b: BatchedCSC,
+    method: str = "h-hash-256/256",
+    *,
+    backend: str = "host",
+    t: float | None = None,
+    b_min: int | None = None,
+    b_max: int | None = None,
+    plan: SpgemmPlan | None = None,
+    cache: bool = True,
+    validate: str | None = None,
+) -> list:
+    """B same-pattern multiplies C_b = A_b @ B_b through one plan execution.
+
+    ``a``/``b`` are :class:`~repro.sparse.format.BatchedCSC` stacks (shared
+    sparsity pattern, values ``[B, nnz]``).  The symbolic plan is built — or
+    fetched from the same LRU as ``spgemm`` — once for the shared pattern,
+    then all B value sets run through one set of kernel launches
+    (``plan.execute_batched``, DESIGN.md §7).  Returns a list of B CSC
+    results, bit-identical to calling ``spgemm`` per element.
+
+    With ``plan`` the symbolic phase is skipped and ``a``/``b`` may also be
+    raw ``[B, nnz]`` value stacks aligned with the planned patterns.
+    """
+    if plan is not None:
+        return plan.execute_batched(a, b, validate=validate)
+    if not isinstance(a, BatchedCSC) or not isinstance(b, BatchedCSC):
+        raise TypeError(
+            "spgemm_batched operands must be BatchedCSC (use BatchedCSC"
+            ".stack / .from_values, or pass plan= with raw value stacks)")
+    if a.batch != b.batch:
+        raise ValueError(f"batch mismatch: {a.batch} vs {b.batch}")
+    if a.batch < 1:
+        raise ValueError("empty batch")
+    if method not in ALGORITHMS:
+        raise ValueError(f"unknown method {method!r}; one of {list(ALGORITHMS)}")
+    if backend not in ("host", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
+    a0, b0 = a.element(0), b.element(0)
+    if cache:
+        p = _cached_plan(a0, b0, method, backend, params)
+    else:
+        p = plan_spgemm(a0, b0, method, backend=backend, t=params.get("t"),
+                        b_min=params.get("b_min"), b_max=params.get("b_max"))
+    return p.execute_batched(a, b, validate=validate)

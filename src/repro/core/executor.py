@@ -1,4 +1,4 @@
-"""Numeric SpGEMM execution of a cached symbolic plan (DESIGN.md §6).
+"""Numeric SpGEMM execution of a cached symbolic plan (DESIGN.md §6–§7).
 
 ``execute(plan, a_values, b_values)`` runs only the value-dependent work of
 C = A @ B; every pattern-dependent decision (sorting, blocking, hash sizing,
@@ -13,6 +13,14 @@ group's accumulator tile / hash tables straight into column-sliced CSC
 through ``sparse.format.CSCBuilder`` — the dense ``[m, n]`` sink of the
 pre-plan backend no longer exists; peak transient memory is one
 ``[m, tile_cols]`` tile.
+
+``execute_batched(plan, a_vals [B, nnz], b_vals [B, nnz])`` is the batched
+numeric phase (DESIGN.md §7): B same-pattern multiplies through *one* set of
+kernel launches (Pallas: each plan group launches once with a leading batch
+axis) or one vectorized numpy pass over the value axis (host SPA / expand,
+whose accumulation structure is pattern-only; the remaining host executors
+fall back to a per-element loop).  Results are bit-identical to a Python
+loop of ``execute``.
 """
 
 from __future__ import annotations
@@ -22,27 +30,78 @@ import numpy as np
 from repro.core import naive
 from repro.core.expand import spgemm_expand
 from repro.core.planner import SpgemmPlan
-from repro.sparse.format import CSC, CSCBuilder, padded_values
+from repro.sparse.format import (
+    CSC,
+    BatchedCSCBuilder,
+    CSCBuilder,
+    padded_values,
+    padded_values_batched,
+)
+
+# filled below: host methods whose batched path is vectorized over the value
+# axis (their accumulation structure is pattern-only); everything else loops
+_BATCHED_HOST: dict = {}
 
 
 def execute(plan: SpgemmPlan, a_values, b_values, *,
-            interpret: bool = True, stats: dict | None = None) -> CSC:
+            interpret: bool = True, stats: dict | None = None,
+            validate: str | None = None) -> CSC:
     """C = A @ B for new numeric values on the plan's sparsity patterns.
 
     ``a_values``/``b_values``: CSC matrices or raw nnz-length value arrays.
     Shapes and nnz are checked against the planned patterns (O(1)); a
-    same-shape same-nnz operand with a different pattern is the caller's
-    responsibility — full validation would cost the O(nnz) fingerprint this
-    path exists to avoid.  ``stats``, if given, is filled with execution
-    statistics (tile shapes, launch count) — tests use it to assert the
-    no-dense-intermediate guarantee.
+    same-shape same-nnz operand with a different pattern is by default the
+    caller's responsibility — pass ``validate="fingerprint"`` to re-hash the
+    operand structure (O(nnz)) and reject any pattern mismatch.  ``stats``,
+    if given, is filled with execution statistics (tile shapes, launch
+    count) — tests use it to assert the no-dense-intermediate guarantee.
     """
-    plan.a.check_compatible(a_values)
-    plan.b.check_compatible(b_values)
+    plan.a.check_compatible(a_values, validate)
+    plan.b.check_compatible(b_values, validate)
     if plan.backend == "host":
         return _execute_host(plan, a_values, b_values)
     return _execute_pallas(plan, a_values, b_values, interpret=interpret,
                            stats=stats)
+
+
+def execute_batched(plan: SpgemmPlan, a_values, b_values, *,
+                    interpret: bool = True, stats: dict | None = None,
+                    validate: str | None = None) -> list:
+    """B same-pattern multiplies through one execution of the plan.
+
+    ``a_values``/``b_values``: :class:`~repro.sparse.format.BatchedCSC`
+    operands or raw ``[B, nnz]`` value stacks (row b = value set b, aligned
+    with the planned pattern).  Returns a list of B CSC results,
+    bit-identical to ``[plan.execute(a_values[b], b_values[b]) ...]``.
+
+    Pallas backend: every plan group launches once for all B value sets (a
+    vmapped leading batch axis), so the launch count is independent of B and
+    peak transient memory is one ``[B, m, tile_cols]`` tile.  Host backend:
+    SPA and expand run one vectorized numpy pass over the value axis; the
+    lock-step executors (SPARS/HASH/hybrids/ESC) fall back to a per-element
+    loop (DESIGN.md §7).
+    """
+    av = plan.a.batched_values(a_values, validate)
+    bv = plan.b.batched_values(b_values, validate)
+    if av.shape[0] != bv.shape[0]:
+        raise ValueError(
+            f"batch mismatch: A has {av.shape[0]} value sets, "
+            f"B has {bv.shape[0]}")
+    batch = av.shape[0]
+    if batch == 0:
+        raise ValueError("empty batch")
+    if plan.backend == "host":
+        vectorized = _BATCHED_HOST.get(plan.method)
+        if vectorized is not None:
+            out = vectorized(plan, av, bv)
+        else:
+            out = [_execute_host(plan, av[b], bv[b]) for b in range(batch)]
+        if stats is not None:
+            stats["batch"] = batch
+            stats["path"] = "vectorized" if vectorized is not None else "loop"
+        return out
+    return _execute_pallas_batched(plan, av, bv, interpret=interpret,
+                                   stats=stats)
 
 
 def _execute_host(plan: SpgemmPlan, a_values, b_values) -> CSC:
@@ -67,6 +126,114 @@ def _execute_host(plan: SpgemmPlan, a_values, b_values) -> CSC:
             pre=plan.pre,
         )
     raise AssertionError(method)
+
+
+# ---------------------------------------------------------------------------
+# vectorized host batched executors (value axis only; structure is
+# pattern-only, so every op below repeats naive.py's accumulation order
+# element-wise across the batch — bit-identical per element)
+# ---------------------------------------------------------------------------
+
+
+def _spa_host_batched(plan: SpgemmPlan, av: np.ndarray,
+                      bv: np.ndarray) -> list:
+    """Batched ``naive.spa_numpy``: one pass, SPA arrays carry [B, m]."""
+    a_cp, a_rows = plan.a.col_ptr, plan.a.row_indices
+    b_cp, b_rows = plan.b.col_ptr, plan.b.row_indices
+    m, n = plan.shape
+    batch = av.shape[0]
+    dtype = np.result_type(av.dtype, bv.dtype)
+
+    spa_values = np.zeros((batch, m), dtype)
+    spa_flags = np.zeros(m, bool)       # pattern-only: shared by the batch
+
+    out_rows = [np.zeros(0, np.int32)] * n
+    out_vals = [np.zeros((batch, 0), dtype)] * n
+    for j in range(n):
+        touched = []
+        for p in range(b_cp[j], b_cp[j + 1]):
+            k = b_rows[p]
+            sl = slice(a_cp[k], a_cp[k + 1])
+            ar = a_rows[sl]
+            spa_values[:, ar] += av[:, sl] * bv[:, p, None]
+            new = ar[~spa_flags[ar]]
+            spa_flags[new] = True
+            if len(new):
+                touched.append(new)
+        idx = np.concatenate(touched) if touched else np.zeros(0, np.int32)
+        out_rows[j] = idx.astype(np.int32)
+        out_vals[j] = spa_values[:, idx].astype(dtype)
+        spa_values[:, idx] = 0
+        spa_flags[idx] = False
+    return _assemble_batched(batch, out_rows, out_vals, (m, n), dtype)
+
+
+def _expand_host_batched(plan: SpgemmPlan, av: np.ndarray,
+                         bv: np.ndarray) -> list:
+    """Batched ``core.expand.spgemm_expand``: the product stream's positions
+    and the compress structure (sort order, duplicate groups, col_ptr) are
+    pattern-only and computed once; only the [B, n_products] value stream and
+    the per-group sums are per-element."""
+    a_cp = plan.a.col_ptr.astype(np.int64)
+    a_rows = plan.a.row_indices
+    b_cp = plan.b.col_ptr.astype(np.int64)
+    b_rows = plan.b.row_indices
+    m, n = plan.shape
+    batch = av.shape[0]
+
+    seg_starts = a_cp[b_rows]
+    seg_lens = (a_cp[b_rows + 1] - seg_starts).astype(np.int64)
+    total = int(seg_lens.sum())
+    if total == 0:
+        empty = CSC(np.zeros(0, av.dtype), np.zeros(0, np.int32),
+                    np.zeros(n + 1, np.int32), (m, n))
+        return [empty] * batch
+    stream_starts = np.concatenate(([0], np.cumsum(seg_lens)[:-1]))
+    apos = np.arange(total, dtype=np.int64) + np.repeat(
+        seg_starts - stream_starts, seg_lens)
+    rows = a_rows[apos].astype(np.int64)
+    cols = np.repeat(
+        np.repeat(np.arange(n, dtype=np.int64), np.diff(b_cp)), seg_lens)
+    vals = av[:, apos] * np.repeat(bv, seg_lens, axis=1)   # [B, total]
+
+    # compress exactly as csc_from_coo(sum_duplicates=True) does
+    order = np.lexsort((rows, cols))
+    rows, cols, vals = rows[order], cols[order], vals[:, order]
+    key = cols * m + rows
+    uniq, inv = np.unique(key, return_inverse=True)
+    acc = np.zeros((batch, len(uniq)), vals.dtype)
+    for b in range(batch):                 # np.add.at per row, same op order
+        np.add.at(acc[b], inv, vals[b])
+    u_cols = (uniq // m).astype(np.int64)
+    u_rows = (uniq % m).astype(np.int32)
+    col_ptr = np.zeros(n + 1, np.int32)
+    np.add.at(col_ptr[1:], u_cols, 1)
+    np.cumsum(col_ptr, out=col_ptr)
+    return [CSC(acc[b], u_rows, col_ptr, (m, n)) for b in range(batch)]
+
+
+_BATCHED_HOST.update(spa=_spa_host_batched, expand=_expand_host_batched)
+VECTORIZED_HOST = tuple(_BATCHED_HOST)
+
+
+def _assemble_batched(batch, cols_rows, cols_vals, shape, dtype) -> list:
+    """Batched ``naive._assemble``: per-column [B, cnt] value slabs."""
+    n = shape[1]
+    col_ptr = np.zeros(n + 1, np.int32)
+    for j in range(n):
+        col_ptr[j + 1] = col_ptr[j] + len(cols_rows[j])
+    if col_ptr[-1]:
+        rows = np.concatenate(cols_rows).astype(np.int32)
+        vals = np.concatenate(cols_vals, axis=1)
+    else:
+        rows = np.zeros(0, np.int32)
+        vals = np.zeros((batch, 0), dtype)
+    return [CSC(vals[b], rows, col_ptr, shape) for b in range(batch)]
+
+
+# ---------------------------------------------------------------------------
+# Pallas paths
+# ---------------------------------------------------------------------------
 
 
 def _execute_pallas(plan: SpgemmPlan, a_values, b_values, *,
@@ -108,6 +275,51 @@ def _execute_pallas(plan: SpgemmPlan, a_values, b_values, *,
         stats["n_launches"] = len(lay.groups)
         stats["result_shape"] = (m, n)
     return c
+
+
+def _execute_pallas_batched(plan: SpgemmPlan, av: np.ndarray,
+                            bv: np.ndarray, *, interpret: bool,
+                            stats: dict | None) -> list:
+    from repro.kernels import ops as kops
+
+    lay = plan.pallas
+    m, n = plan.shape
+    batch = av.shape[0]
+    avp = padded_values_batched(av, lay.a_gather,
+                                lay.a_mask).astype(np.float32, copy=False)
+    bvp = padded_values_batched(bv, lay.b_gather,
+                                lay.b_mask).astype(np.float32, copy=False)
+    a_arrs = kops.device_operand(lay.a_rows, avp, lay.a_nnz)
+
+    builder = BatchedCSCBuilder(batch, (m, n), np.float32)
+    for g in lay.groups:
+        g_vals = np.where(g.valid[None, :, None], bvp[:, g.sel],
+                          np.float32(0))
+        if g.kind == "spa":
+            tiles = kops.run_spa_batched(g, a_arrs, g_vals, m=m,
+                                         block_cols=lay.block_cols,
+                                         interpret=interpret)
+            builder.add_dense_tile(g.cols, tiles)
+        elif g.kind == "spars":
+            tiles = kops.run_spars_batched(g, a_arrs, g_vals, m=m,
+                                           block_cols=lay.block_cols,
+                                           interpret=interpret)
+            builder.add_dense_tile(g.cols, tiles)
+        elif g.kind == "hash":
+            keys, vals = kops.run_hash_batched(g, a_arrs, g_vals, m=m,
+                                               block_cols=lay.block_cols,
+                                               interpret=interpret)
+            builder.add_hash_tables(g.cols, keys, vals)
+        else:
+            raise AssertionError(g.kind)
+    out = builder.build()
+    if stats is not None:
+        stats["tile_shapes"] = list(builder.tile_shapes)
+        stats["peak_tile_elems"] = builder.peak_tile_elems
+        stats["n_launches"] = len(lay.groups)   # independent of the batch
+        stats["result_shape"] = (m, n)
+        stats["batch"] = batch
+    return out
 
 
 def _values(x) -> np.ndarray:

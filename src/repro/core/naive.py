@@ -127,14 +127,16 @@ def spars_numpy(
             bk = b_rows[vidx_b[lanes]]
             bv = b_vals[vidx_b[lanes]]
             apos = a_cp[bk] + vcnt_a[lanes]
-            ar = a_rows[apos]
-            av = a_vals[apos]
-            spa_values[ar, lanes] += av * bv
-            newm = ~spa_flags[ar, lanes]
-            spa_flags[ar[newm], lanes[newm]] = True
-            for ln, r in zip(lanes[newm], ar[newm]):
+            # a lane whose B entry references an *empty* A column produces no
+            # product; it just consumes that B entry this step (ok == False)
+            ok = apos < a_cp[bk + 1]
+            l_ok, r_ok = lanes[ok], a_rows[apos[ok]]
+            spa_values[r_ok, l_ok] += a_vals[apos[ok]] * bv[ok]
+            newm = ~spa_flags[r_ok, l_ok]
+            spa_flags[r_ok[newm], l_ok[newm]] = True
+            for ln, r in zip(l_ok[newm], r_ok[newm]):
                 touched[ln].append(r)
-            last = apos + 1 == a_cp[bk + 1]
+            last = apos + 1 >= a_cp[bk + 1]
             vcnt_a[lanes] = np.where(last, 0, vcnt_a[lanes] + 1)
             vidx_b[lanes] += last
             active = vidx_b < vend_b
@@ -186,10 +188,14 @@ def hash_numpy(
         insert_order = [[] for _ in range(L)]
         active = vidx_b < vend_b
         while active.any():
-            lanes = np.nonzero(active)[0]
-            bk = b_rows[vidx_b[lanes]]
-            bv = b_vals[vidx_b[lanes]]
-            apos = a_cp[bk] + vcnt_a[lanes]
+            all_lanes = np.nonzero(active)[0]
+            bk = b_rows[vidx_b[all_lanes]]
+            bv_all = b_vals[vidx_b[all_lanes]]
+            apos_all = a_cp[bk] + vcnt_a[all_lanes]
+            # lanes whose B entry references an empty A column produce no
+            # product; they only consume that B entry this step (ok == False)
+            ok = apos_all < a_cp[bk + 1]
+            lanes, apos, bv = all_lanes[ok], apos_all[ok], bv_all[ok]
             ar = a_rows[apos].astype(np.int64)
             av = a_vals[apos]
             # vectorized linear probing across lanes (lanes independent)
@@ -210,9 +216,9 @@ def hash_numpy(
                 pending[tgt] = False
                 nxt = pl[~place]
                 pos[nxt] = (pos[nxt] + 1) % H
-            last = apos + 1 == a_cp[bk + 1]
-            vcnt_a[lanes] = np.where(last, 0, vcnt_a[lanes] + 1)
-            vidx_b[lanes] += last
+            last = apos_all + 1 >= a_cp[bk + 1]
+            vcnt_a[all_lanes] = np.where(last, 0, vcnt_a[all_lanes] + 1)
+            vidx_b[all_lanes] += last
             active = vidx_b < vend_b
         for ln, col in enumerate(cols):
             idx = np.asarray(insert_order[ln], np.int64)
@@ -410,14 +416,15 @@ def spars_ws_numpy(
             bk = b_rows[vidx_b[lanes]]
             bv = b_vals[vidx_b[lanes]]
             apos = a_cp[bk] + vcnt_a[lanes]
-            ar = a_rows[apos]
-            av = a_vals[apos]
-            spa_values[ar, lanes] += av * bv
-            newm = ~spa_flags[ar, lanes]
-            spa_flags[ar[newm], lanes[newm]] = True
-            for ln, r in zip(lanes[newm], ar[newm]):
+            # empty A column referenced: no product, consume the B entry
+            ok = apos < a_cp[bk + 1]
+            l_ok, r_ok = lanes[ok], a_rows[apos[ok]]
+            spa_values[r_ok, l_ok] += a_vals[apos[ok]] * bv[ok]
+            newm = ~spa_flags[r_ok, l_ok]
+            spa_flags[r_ok[newm], l_ok[newm]] = True
+            for ln, r in zip(l_ok[newm], r_ok[newm]):
                 touched[ln].append(r)
-            last = apos + 1 == a_cp[bk + 1]
+            last = apos + 1 >= a_cp[bk + 1]
             vcnt_a[lanes] = np.where(last, 0, vcnt_a[lanes] + 1)
             vidx_b[lanes] += last
             for ln in lanes:

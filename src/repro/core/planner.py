@@ -27,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analysis import Preprocess, preprocess
-from repro.sparse.format import CSC, _np, csc_pad_gather
+from repro.sparse.format import BatchedCSC, CSC, _np, csc_pad_gather
+from repro.sparse.stats import steps_per_column
 
 # method -> base kwargs; the paper's Section 5.3 configurations
 ALGORITHMS = {
@@ -127,15 +128,22 @@ class Pattern:
             pattern_fingerprint(m),
         )
 
-    def check_compatible(self, operand) -> None:
-        """Cheap O(1) compatibility check of an execute-time operand.
+    def check_compatible(self, operand, validate: str | None = None) -> None:
+        """Compatibility check of an execute-time operand.
 
-        CSC operands must match the planned shape and nnz; raw value arrays
-        must cover the planned nnz.  A same-shape same-nnz CSC with a
-        *different* pattern is not detected (a full check would cost the
-        O(nnz) fingerprint the plan-reuse path exists to avoid).
+        By default O(1): structured operands (CSC/BatchedCSC) must match the
+        planned shape and nnz; raw value arrays must cover the planned nnz.
+        A same-shape same-nnz operand with a *different* pattern is not
+        detected by the default check (the full check costs the O(nnz)
+        fingerprint the plan-reuse path exists to avoid) — pass
+        ``validate="fingerprint"`` to opt into re-hashing the operand's
+        structure and rejecting any pattern mismatch.  Raw value arrays carry
+        no structure, so fingerprint validation is vacuous for them.
         """
-        if isinstance(operand, CSC):
+        if validate not in (None, "fingerprint"):
+            raise ValueError(
+                f"unknown validate mode {validate!r}; None or 'fingerprint'")
+        if isinstance(operand, (CSC, BatchedCSC)):
             if tuple(operand.shape) != self.shape:
                 raise ValueError(
                     f"operand shape {tuple(operand.shape)} != planned "
@@ -145,16 +153,52 @@ class Pattern:
                 raise ValueError(
                     f"operand nnz {nnz} != planned {int(self.col_ptr[-1])} "
                     "(sparsity pattern does not match this plan)")
-        elif np.asarray(operand).shape[0] < int(self.col_ptr[-1]):
-            raise ValueError(
-                f"need >= {int(self.col_ptr[-1])} values, "
-                f"got {np.asarray(operand).shape[0]}")
+            if (validate == "fingerprint"
+                    and pattern_fingerprint(operand) != self.fingerprint):
+                raise ValueError(
+                    "operand sparsity pattern does not match this plan "
+                    "(fingerprint mismatch despite equal shape and nnz)")
+        else:
+            v = np.asarray(operand)
+            if v.ndim != 1:
+                raise ValueError(
+                    f"expected a 1-D value array, got shape {v.shape} "
+                    "(use execute_batched for [B, nnz] value stacks)")
+            if v.shape[0] < int(self.col_ptr[-1]):
+                raise ValueError(
+                    f"need >= {int(self.col_ptr[-1])} values, "
+                    f"got {v.shape[0]}")
 
-    def with_values(self, values) -> CSC:
+    def with_values(self, values, validate: str | None = None) -> CSC:
         """Bind numeric values to this pattern (accepts a CSC or raw array)."""
-        self.check_compatible(values)
+        self.check_compatible(values, validate)
         v = values.values if isinstance(values, CSC) else np.asarray(values)
         return CSC(v, self.row_indices, self.col_ptr, self.shape)
+
+    def batched_values(self, values, validate: str | None = None
+                       ) -> np.ndarray:
+        """Host [B, nnz] value stack from a batched execute-time operand.
+
+        Accepts a :class:`BatchedCSC` with this pattern or a raw ``[B, nnz]``
+        array; a single CSC / 1-D array is rejected (use ``execute``).
+        """
+        if validate not in (None, "fingerprint"):
+            raise ValueError(
+                f"unknown validate mode {validate!r}; None or 'fingerprint'")
+        if isinstance(values, BatchedCSC):
+            self.check_compatible(values, validate)
+            v = _np(values.values)
+        else:
+            v = np.asarray(values)
+            if v.ndim != 2:
+                raise ValueError(
+                    "batched operand must be a BatchedCSC or a [B, nnz] "
+                    f"value array, got shape {v.shape}")
+            if v.shape[1] < int(self.col_ptr[-1]):
+                raise ValueError(
+                    f"need >= {int(self.col_ptr[-1])} values per batch "
+                    f"element, got {v.shape[1]}")
+        return v[:, : int(self.col_ptr[-1])]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,12 +274,28 @@ class SpgemmPlan:
                 self.backend, self.params)
 
     def execute(self, a_values, b_values, *, interpret: bool = True,
-                stats: dict | None = None) -> CSC:
+                stats: dict | None = None,
+                validate: str | None = None) -> CSC:
         """Numeric phase only: C for new values on the planned patterns."""
         from repro.core.executor import execute
 
         return execute(self, a_values, b_values, interpret=interpret,
-                       stats=stats)
+                       stats=stats, validate=validate)
+
+    def execute_batched(self, a_values, b_values, *, interpret: bool = True,
+                        stats: dict | None = None,
+                        validate: str | None = None) -> list:
+        """Batched numeric phase: B same-pattern multiplies, one schedule.
+
+        ``a_values``/``b_values``: :class:`~repro.sparse.format.BatchedCSC`
+        operands or raw ``[B, nnz]`` value stacks aligned with the planned
+        patterns.  Returns the B results as a list of CSC matrices,
+        bit-identical to a Python loop of :meth:`execute` (DESIGN.md §7).
+        """
+        from repro.core.executor import execute_batched
+
+        return execute_batched(self, a_values, b_values, interpret=interpret,
+                               stats=stats, validate=validate)
 
 
 def _freeze(params: dict) -> tuple:
@@ -351,9 +411,13 @@ def _plan_pallas(a, b, method, params, block_cols, tile_cols):
         fam = "hash" if "hash" in method else "spars"
         starts, sizes = pre.blocks.starts, pre.blocks.sizes
         n_blocks = pre.blocks.n_blocks
-        # per-block trip count = the block head's Op_j (columns are sorted
-        # non-increasing, so the head is the block max)
-        steps_all = pre.ops_sorted[starts].astype(np.int32)
+        # per-block trip count: NOT the block head's Op_j — a lane consumes
+        # one step per stored B entry even when it references an empty A
+        # column (zero products), so the bound is the block max of
+        # steps_per_column.  Blocks tile [split, n) contiguously in sorted
+        # order, so reduceat over the sorted steps gives per-block maxima.
+        steps_sorted = steps_per_column(a, b)[pre.perm]
+        steps_all = np.maximum.reduceat(steps_sorted, starts).astype(np.int32)
         if fam == "hash":
             # blocks with equal table size H form contiguous runs (H shrinks
             # monotonically along sorted blocks, Section 3.2)

@@ -9,19 +9,24 @@
 
 All kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling,
 PrefetchScalarGridSpec for CSC pointer structure) and validated on CPU in
-interpret mode.
+interpret mode.  Each SpGEMM kernel also has a ``*_batched`` variant that
+carries a leading batch axis on the value operands only — B same-pattern
+multiplies in one launch (DESIGN.md §7).
 """
 
-from repro.kernels.spa import spa_spgemm
-from repro.kernels.spars import spars_spgemm
-from repro.kernels.hash_spgemm import hash_spgemm
+from repro.kernels.spa import spa_spgemm, spa_spgemm_batched
+from repro.kernels.spars import spars_spgemm, spars_spgemm_batched
+from repro.kernels.hash_spgemm import hash_spgemm, hash_spgemm_batched
 from repro.kernels.bsr_spmm import bsr_spmm, bsr_from_dense
 from repro.kernels.ops import spgemm_pallas
 
 __all__ = [
     "spa_spgemm",
+    "spa_spgemm_batched",
     "spars_spgemm",
+    "spars_spgemm_batched",
     "hash_spgemm",
+    "hash_spgemm_batched",
     "bsr_spmm",
     "bsr_from_dense",
     "spgemm_pallas",

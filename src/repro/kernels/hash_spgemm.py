@@ -140,3 +140,22 @@ def hash_spgemm(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, steps,
         ],
         interpret=interpret,
     )(steps, b_rows, b_vals, b_nnz, a_rows, a_vals, a_nnz)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "h", "block_cols", "interpret"))
+def hash_spgemm_batched(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, steps,
+                        *, m: int, h: int, block_cols: int = 128,
+                        interpret: bool = True):
+    """Batched HASH: tables (keys, vals) [B, h, n_b] for B value sets.
+
+    Probing positions depend only on row indices, so every batch element
+    fills identical table slots; only ``vals`` differs across the batch.
+    Value operands carry the batch axis, pattern operands and trip counts
+    are shared, and all B multiplies run in one vmapped launch
+    (DESIGN.md §7).
+    """
+    f = functools.partial(hash_spgemm, m=m, h=h, block_cols=block_cols,
+                          interpret=interpret)
+    return jax.vmap(f, in_axes=(None, 0, None, None, 0, None, None))(
+        a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, steps)

@@ -9,6 +9,11 @@ VMEM tile selection (DESIGN.md §2); results are compacted per group straight
 into CSC by the executor, so no ``[m, n]`` dense intermediate ever exists
 (DESIGN.md §6).
 
+``run_*_batched`` are the batched twins (DESIGN.md §7): the same plan group
+executed once for B same-pattern value sets — value operands carry a
+leading batch axis, pattern operands are shared, and the vmapped kernels
+realize the batch as a leading grid dimension.
+
 ``spgemm_pallas`` is the device backend of ``core.api.spgemm``: a thin
 plan-then-execute wrapper kept for direct use (tests, notebooks).
 """
@@ -20,9 +25,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.sparse.format import CSC
-from repro.kernels.spa import spa_spgemm
-from repro.kernels.spars import spars_spgemm
-from repro.kernels.hash_spgemm import hash_spgemm
+from repro.kernels.spa import spa_spgemm, spa_spgemm_batched
+from repro.kernels.spars import spars_spgemm, spars_spgemm_batched
+from repro.kernels.hash_spgemm import hash_spgemm, hash_spgemm_batched
 
 
 def device_operand(rows: np.ndarray, vals: np.ndarray, nnz: np.ndarray):
@@ -65,6 +70,43 @@ def run_hash(group, a_arrs, b_vals, *, m: int, block_cols: int,
         m=m, h=int(group.h), block_cols=block_cols, interpret=interpret)
     return (np.asarray(keys)[:, : group.n_real],
             np.asarray(vals)[:, : group.n_real])
+
+
+def run_spa_batched(group, a_arrs, b_vals, *, m: int, block_cols: int,
+                    interpret: bool = True) -> np.ndarray:
+    """Dense [B, m, n_real] tiles for one SPA plan group, one launch."""
+    a_rows, a_vals, a_nnz = a_arrs          # a_vals carries the batch axis
+    out = spa_spgemm_batched(
+        a_rows, a_vals, a_nnz,
+        jnp.asarray(group.b_rows), jnp.asarray(b_vals),
+        jnp.asarray(group.b_nnz),
+        m=m, block_cols=block_cols, interpret=interpret)
+    return np.asarray(out)[:, :, : group.n_real]
+
+
+def run_spars_batched(group, a_arrs, b_vals, *, m: int, block_cols: int,
+                      interpret: bool = True) -> np.ndarray:
+    """Dense [B, m, n_real] tiles for one SPARS plan group, one launch."""
+    a_rows, a_vals, a_nnz = a_arrs
+    out, _flags = spars_spgemm_batched(
+        a_rows, a_vals, a_nnz,
+        jnp.asarray(group.b_rows), jnp.asarray(b_vals),
+        jnp.asarray(group.b_nnz), jnp.asarray(group.steps),
+        m=m, block_cols=block_cols, interpret=interpret)
+    return np.asarray(out)[:, :, : group.n_real]
+
+
+def run_hash_batched(group, a_arrs, b_vals, *, m: int, block_cols: int,
+                     interpret: bool = True):
+    """Hash tables (keys, vals) [B, H, n_real] for one HASH plan group."""
+    a_rows, a_vals, a_nnz = a_arrs
+    keys, vals = hash_spgemm_batched(
+        a_rows, a_vals, a_nnz,
+        jnp.asarray(group.b_rows), jnp.asarray(b_vals),
+        jnp.asarray(group.b_nnz), jnp.asarray(group.steps),
+        m=m, h=int(group.h), block_cols=block_cols, interpret=interpret)
+    return (np.asarray(keys)[:, :, : group.n_real],
+            np.asarray(vals)[:, :, : group.n_real])
 
 
 def spgemm_pallas(

@@ -86,3 +86,21 @@ def spa_spgemm(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz,
         out_shape=jax.ShapeDtypeStruct((m, n_b), a_vals.dtype),
         interpret=interpret,
     )(b_rows, b_vals, b_nnz, a_rows, a_vals, a_nnz)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "block_cols", "interpret"))
+def spa_spgemm_batched(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz,
+                       *, m: int, block_cols: int = 128,
+                       interpret: bool = True):
+    """Batched SPA: dense C [B, m, n_b] for B same-pattern value sets.
+
+    Only the value operands carry the batch axis (``a_vals [B, n_a, za]``,
+    ``b_vals [B, n_b, zb]``); the pattern operands (rows, nnz) are shared.
+    ``jax.vmap`` over the pallas_call turns the batch into a leading grid
+    dimension, so all B multiplies run in one launch (DESIGN.md §7), and
+    each batch slice is bit-identical to the unbatched kernel.
+    """
+    f = functools.partial(spa_spgemm, m=m, block_cols=block_cols,
+                          interpret=interpret)
+    return jax.vmap(f, in_axes=(None, 0, None, None, 0, None))(
+        a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz)

@@ -117,3 +117,20 @@ def spars_spgemm(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, steps,
         ],
         interpret=interpret,
     )(steps, b_rows, b_vals, b_nnz, a_rows, a_vals, a_nnz)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "block_cols", "interpret"))
+def spars_spgemm_batched(a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, steps,
+                         *, m: int, block_cols: int = 128,
+                         interpret: bool = True):
+    """Batched SPARS: C + flags [B, m, n_b] for B same-pattern value sets.
+
+    Value operands carry the batch axis (``a_vals [B, n_a, za]``,
+    ``b_vals [B, n_b, zb]``); pattern operands and the per-block trip counts
+    are shared.  One vmapped launch for all B (DESIGN.md §7).
+    """
+    f = functools.partial(spars_spgemm, m=m, block_cols=block_cols,
+                          interpret=interpret)
+    return jax.vmap(f, in_axes=(None, 0, None, None, 0, None, None))(
+        a_rows, a_vals, a_nnz, b_rows, b_vals, b_nnz, steps)

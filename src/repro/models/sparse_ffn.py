@@ -67,6 +67,23 @@ class SparseMatmul:
         return bsr_spmm(self.block_idx, self.block_nnz, self.blocks, x,
                         bn=bn, interpret=interpret)
 
+    def batched(self, xs, *, bn=None, interpret=True):
+        """y [B, M, N] = W @ xs[b] for xs [B, K, N] — one launch for all B.
+
+        The weight pattern is static (pruned at conversion time), so a batch
+        of activations is exactly the same-pattern regime as batched SpGEMM
+        (DESIGN.md §7): the BSR structure operands are shared and only the
+        dense activations carry the batch axis, vmapped into a single
+        leading-grid-dimension launch instead of B Python round-trips.
+        """
+        if self.path == "dense":
+            return self.dense_w @ xs              # broadcasts over the batch
+        n = xs.shape[2]
+        bn = bn or min(128, n)
+        f = lambda x: bsr_spmm(self.block_idx, self.block_nnz, self.blocks,
+                               x, bn=bn, interpret=interpret)
+        return jax.vmap(f)(xs)
+
     @property
     def flops_per_col(self) -> int:
         m, k = self.shape
@@ -93,7 +110,16 @@ class SparseFFN:
         return cls(mk(p["gate"]["w"]), mk(p["up"]["w"]), mk(p["down"]["w"]))
 
     def __call__(self, x):
-        """x [T, D] -> [T, D] (column-major through the kernels)."""
+        """x [T, D] -> [T, D], or a batch [B, T, D] -> [B, T, D].
+
+        A 3-D input runs the batched path: one vmapped kernel launch per
+        matrix for the whole batch, replacing the caller-side per-sequence
+        loop (the inner loop of batched serving).
+        """
+        if x.ndim == 3:
+            xt = jnp.swapaxes(x, 1, 2)             # [B, D, T]
+            h = jax.nn.silu(self.gate.batched(xt)) * self.up.batched(xt)
+            return jnp.swapaxes(self.down.batched(h), 1, 2)
         xt = x.T                                   # [D, T]
         h = jax.nn.silu(self.gate(xt)) * self.up(xt)
         return self.down(h).T

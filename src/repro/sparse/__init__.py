@@ -9,6 +9,8 @@ from repro.sparse.format import (
     CSC,
     CSR,
     COO,
+    BatchedCSC,
+    BatchedCSCBuilder,
     CSCBuilder,
     csc_from_dense,
     csc_to_dense,
@@ -18,6 +20,7 @@ from repro.sparse.format import (
     csc_pad_gather,
     csc_to_padded_columns,
     padded_values,
+    padded_values_batched,
     validate_csc,
 )
 from repro.sparse.generate import (
@@ -29,6 +32,7 @@ from repro.sparse.generate import (
 from repro.sparse.stats import (
     column_nnz,
     ops_per_column,
+    steps_per_column,
     matrix_stats,
     MatrixStats,
 )
@@ -42,6 +46,8 @@ __all__ = [
     "CSC",
     "CSR",
     "COO",
+    "BatchedCSC",
+    "BatchedCSCBuilder",
     "csc_from_dense",
     "csc_to_dense",
     "csc_to_csr",
@@ -50,6 +56,7 @@ __all__ = [
     "csc_pad_gather",
     "csc_to_padded_columns",
     "padded_values",
+    "padded_values_batched",
     "CSCBuilder",
     "validate_csc",
     "random_uniform_csc",
@@ -58,6 +65,7 @@ __all__ = [
     "random_powerlaw_csc",
     "column_nnz",
     "ops_per_column",
+    "steps_per_column",
     "matrix_stats",
     "MatrixStats",
     "SUITESPARSE_TABLE1",

@@ -97,6 +97,99 @@ class CSC:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
+class BatchedCSC:
+    """B same-pattern CSC matrices: one structure, stacked values.
+
+    values[b, p]    value of the p-th stored element in batch element b
+    row_indices[p]  its row (shared by every batch element)
+    col_ptr[j]      shared column offsets; col_ptr[n] = nnz
+    shape           (n_rows, n_cols) of each element, static
+
+    This is the operand type of the batched SpGEMM path (DESIGN.md §7): the
+    symbolic plan is built once for the shared pattern and the numeric phase
+    runs all B value sets through one set of kernel launches.
+    """
+
+    values: Array          # [B, capacity]
+    row_indices: Array
+    col_ptr: Array
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.values, self.row_indices, self.col_ptr), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, row_indices, col_ptr = children
+        return cls(values, row_indices, col_ptr, aux)
+
+    @property
+    def batch(self) -> int:
+        return int(self.values.shape[0])
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int(_np(self.col_ptr)[-1])
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @classmethod
+    def stack(cls, mats) -> "BatchedCSC":
+        """Stack same-pattern CSC matrices (structure verified, O(nnz))."""
+        mats = list(mats)
+        if not mats:
+            raise ValueError("need at least one matrix to stack")
+        head = mats[0]
+        nnz = head.nnz
+        cp = _np(head.col_ptr)
+        ri = _np(head.row_indices)[:nnz]
+        for m in mats[1:]:
+            if (
+                tuple(m.shape) != tuple(head.shape)
+                or not np.array_equal(_np(m.col_ptr), cp)
+                or not np.array_equal(_np(m.row_indices)[: m.nnz], ri)
+            ):
+                raise ValueError(
+                    "cannot stack: sparsity patterns differ (BatchedCSC "
+                    "requires one shared pattern)")
+        vals = np.stack([_np(m.values)[:nnz] for m in mats])
+        return cls(vals, ri.astype(np.int32), cp.astype(np.int32),
+                   tuple(head.shape))
+
+    @classmethod
+    def from_values(cls, pattern_csc: CSC, values) -> "BatchedCSC":
+        """Bind a [B, nnz] value stack to an existing pattern."""
+        v = _np(values)
+        if v.ndim != 2 or v.shape[0] < 1 or v.shape[1] < pattern_csc.nnz:
+            raise ValueError(
+                f"values must be [B >= 1, >={pattern_csc.nnz}], "
+                f"got {v.shape}")
+        return cls(v, _np(pattern_csc.row_indices), _np(pattern_csc.col_ptr),
+                   tuple(pattern_csc.shape))
+
+    def element(self, b: int) -> CSC:
+        """The b-th matrix as a plain CSC (structure arrays shared)."""
+        return CSC(self.values[b], self.row_indices, self.col_ptr, self.shape)
+
+    def __getitem__(self, b: int) -> CSC:
+        return self.element(b)
+
+    def unstack(self) -> list:
+        return [self.element(b) for b in range(self.batch)]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
 class CSR:
     """Compressed Sparse Row matrix (transpose-dual of CSC)."""
 
@@ -267,6 +360,21 @@ def padded_values(values, gather, mask):
     return np.where(mask, v[gather], 0).astype(v.dtype, copy=False)
 
 
+def padded_values_batched(values, gather, mask):
+    """Batched ``padded_values``: [B, nnz] -> [B, n_cols, Z] in one gather.
+
+    Row b of the output equals ``padded_values(values[b], gather, mask)``
+    exactly; the batched SpGEMM path uses this to re-pad all B value sets of
+    a :class:`BatchedCSC` without a per-element Python loop (DESIGN.md §7).
+    """
+    v = _np(values)
+    if v.ndim != 2:
+        raise ValueError(f"expected [B, nnz] values, got shape {v.shape}")
+    if v.shape[1] == 0:
+        return np.zeros((v.shape[0],) + gather.shape, v.dtype)
+    return np.where(mask[None], v[:, gather], 0).astype(v.dtype, copy=False)
+
+
 def csc_to_padded_columns(m: CSC, pad_to: int | None = None):
     """Ragged→rectangular view for lock-step kernels.
 
@@ -358,6 +466,58 @@ class CSCBuilder:
         vals = np.concatenate(vals_l) if n else empty_v
         return CSC(vals.astype(self.dtype), rows.astype(np.int32), col_ptr,
                    (m, n))
+
+
+class BatchedCSCBuilder:
+    """Batch-axis-aware CSC assembly from batched kernel outputs.
+
+    Consumes one ``[B, m, L]`` dense tile (or ``[B, H, L]`` hash-table pair)
+    per plan group — the output of a single batched kernel launch — and
+    compacts it into B independent CSC results.  Per-element compaction
+    delegates to :class:`CSCBuilder`, so each element is bit-identical to
+    what a per-call execution would have produced; only the tile bookkeeping
+    (shape checks, peak accounting) is shared.  Peak transient memory is one
+    ``[B, m, tile_cols]`` tile (DESIGN.md §7).
+    """
+
+    def __init__(self, batch: int, shape, dtype=np.float32):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.batch = int(batch)
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self.builders = [CSCBuilder(shape, dtype) for _ in range(batch)]
+        self.tile_shapes: list = []  # (kind, (B, rows, cols)) per group tile
+
+    @property
+    def peak_tile_elems(self) -> int:
+        """Largest batched intermediate tile compacted so far, in elements."""
+        return max((int(np.prod(s)) for _, s in self.tile_shapes), default=0)
+
+    def add_dense_tile(self, col_ids, tiles) -> None:
+        """Compact a batched dense [B, m, L] accumulator tile."""
+        t = _np(tiles)
+        if t.ndim != 3 or t.shape[0] != self.batch:
+            raise ValueError(
+                f"expected [B={self.batch}, m, L] tile, got {t.shape}")
+        self.tile_shapes.append(("dense", t.shape))
+        for b, builder in enumerate(self.builders):
+            builder.add_dense_tile(col_ids, t[b])
+
+    def add_hash_tables(self, col_ids, keys, vals) -> None:
+        """Compact batched per-lane hash tables keys/vals [B, H, L]."""
+        kt = _np(keys)
+        vt = _np(vals)
+        if kt.ndim != 3 or kt.shape[0] != self.batch:
+            raise ValueError(
+                f"expected [B={self.batch}, H, L] tables, got {kt.shape}")
+        self.tile_shapes.append(("hash", kt.shape))
+        for b, builder in enumerate(self.builders):
+            builder.add_hash_tables(col_ids, kt[b], vt[b])
+
+    def build(self) -> list:
+        """The B assembled CSC results, in batch order."""
+        return [builder.build() for builder in self.builders]
 
 
 def validate_csc(m: CSC, *, sorted_rows: bool = False) -> None:

@@ -31,6 +31,26 @@ def ops_per_column(a: CSC, b: CSC) -> np.ndarray:
     return out
 
 
+def steps_per_column(a: CSC, b: CSC) -> np.ndarray:
+    """Lock-step trip-count bound per C column: sum of max(nnz(A[:,k]), 1).
+
+    A lock-step lane consumes one step per stored B[k,j] even when A's
+    column k is *empty* (the entry yields no products but the cursor still
+    has to advance past it), so the kernel trip count must bound this — not
+    ``ops_per_column``, which counts only real products and under-counts
+    whenever B references an empty A column.
+    """
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    za = np.maximum(column_nnz(a), 1)
+    rows_b = _np(b.row_indices)[: b.nnz]
+    cp_b = _np(b.col_ptr)
+    out = np.zeros(b.n_cols, np.int64)
+    seg = np.repeat(np.arange(b.n_cols), np.diff(cp_b))
+    np.add.at(out, seg, za[rows_b])
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class MatrixStats:
     """The statistics columns of the paper's Table 1."""

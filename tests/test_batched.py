@@ -1,0 +1,199 @@
+"""Batched same-pattern execution (DESIGN.md §7): bit-identity with the
+per-call loop across all methods/backends, BatchedCSC semantics, launch-count
+and tile-bound guarantees, and the spgemm_batched API."""
+
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, plan_cache_clear, plan_cache_info, \
+    plan_spgemm, spgemm, spgemm_batched
+from repro.sparse import BatchedCSC, random_powerlaw_csc, random_uniform_csc
+from repro.sparse.format import CSC, validate_csc
+
+PALLAS_METHODS = [m for m in ALGORITHMS if m not in ("esc", "expand")]
+
+
+def _reweight(m: CSC, seed: int) -> CSC:
+    rng = np.random.default_rng(seed)
+    return CSC(rng.normal(size=m.nnz), m.row_indices, m.col_ptr, m.shape)
+
+
+def _stacked(m: CSC, batch: int, seed0: int = 100):
+    mats = [_reweight(m, seed0 + b) for b in range(batch)]
+    return mats, BatchedCSC.stack(mats)
+
+
+def _bit_identical(x: CSC, y: CSC) -> bool:
+    return (
+        x.shape == y.shape
+        and np.array_equal(np.asarray(x.col_ptr), np.asarray(y.col_ptr))
+        and np.array_equal(np.asarray(x.row_indices)[: x.nnz],
+                           np.asarray(y.row_indices)[: y.nnz])
+        and np.array_equal(np.asarray(x.values)[: x.nnz],
+                           np.asarray(y.values)[: y.nnz])
+    )
+
+
+# --- batched == looped, bit for bit, every method / both backends ---------
+
+
+@pytest.mark.parametrize("method", sorted(ALGORITHMS))
+def test_batched_bit_identical_host(method):
+    a = random_powerlaw_csc(70, 3.0, seed=1)
+    plan = plan_spgemm(a, a, method)
+    mats, batched = _stacked(a, batch=3)
+    got = plan.execute_batched(batched, batched)
+    want = [plan.execute(m_, m_) for m_ in mats]
+    assert len(got) == 3
+    for g, w in zip(got, want):
+        assert _bit_identical(g, w), method
+        validate_csc(g)
+    # raw [B, nnz] value stacks are accepted too
+    vals = np.stack([np.asarray(m_.values) for m_ in mats])
+    raw = plan.execute_batched(vals, vals)
+    for g, w in zip(raw, want):
+        assert _bit_identical(g, w), method
+
+
+@pytest.mark.parametrize("method", sorted(PALLAS_METHODS))
+def test_batched_bit_identical_pallas(method):
+    a = random_powerlaw_csc(48, 3.0, seed=2)
+    plan = plan_spgemm(a, a, method, backend="pallas", block_cols=16)
+    mats, batched = _stacked(a, batch=2)
+    got = plan.execute_batched(batched, batched)
+    want = [plan.execute(m_, m_) for m_ in mats]
+    for g, w in zip(got, want):
+        assert _bit_identical(g, w), method
+
+
+def test_batched_mixed_operands():
+    """A and B stacks with different value streams (not A @ A)."""
+    a = random_powerlaw_csc(40, 3.0, seed=3)
+    plan = plan_spgemm(a, a, "spa")
+    a_mats, a_b = _stacked(a, batch=3, seed0=10)
+    b_mats, b_b = _stacked(a, batch=3, seed0=50)
+    got = plan.execute_batched(a_b, b_b)
+    for g, am, bm in zip(got, a_mats, b_mats):
+        assert _bit_identical(g, plan.execute(am, bm))
+
+
+# --- the launch/tile guarantees of the batched Pallas path ----------------
+
+
+def test_batched_pallas_launch_count_independent_of_batch():
+    a = random_powerlaw_csc(64, 3.0, seed=4)
+    plan = plan_spgemm(a, a, "h-hash-256/256", backend="pallas",
+                       block_cols=16)
+    _, b2 = _stacked(a, batch=2)
+    _, b4 = _stacked(a, batch=4)
+    s2, s4 = {}, {}
+    plan.execute_batched(b2, b2, stats=s2)
+    plan.execute_batched(b4, b4, stats=s4)
+    assert s2["n_launches"] == s4["n_launches"] == len(plan.pallas.groups)
+    assert (s2["batch"], s4["batch"]) == (2, 4)
+
+
+def test_batched_pallas_peak_is_one_batched_tile():
+    n, block, batch = 128, 16, 3
+    a = random_powerlaw_csc(n, 3.0, seed=5)
+    for method in ("spa", "h-hash-256/256"):
+        plan = plan_spgemm(a, a, method, backend="pallas", block_cols=block)
+        _, bb = _stacked(a, batch=batch)
+        stats = {}
+        plan.execute_batched(bb, bb, stats=stats)
+        m_dim, n_dim = stats["result_shape"]
+        # peak transient = one [B, m, <=tile_cols] tile, never [B, m, n]
+        assert stats["peak_tile_elems"] < batch * m_dim * n_dim, method
+        for kind, shape in stats["tile_shapes"]:
+            assert shape[0] == batch
+            if kind == "dense":
+                assert shape[1] == m_dim and shape[2] <= block
+            else:
+                assert shape[2] <= block
+
+
+def test_batched_host_stats_report_path():
+    a = random_powerlaw_csc(40, 3.0, seed=6)
+    _, bb = _stacked(a, batch=2)
+    for method, path in (("spa", "vectorized"), ("expand", "vectorized"),
+                         ("hash-256/256", "loop")):
+        stats = {}
+        plan_spgemm(a, a, method).execute_batched(bb, bb, stats=stats)
+        assert stats["path"] == path, method
+        assert stats["batch"] == 2
+
+
+# --- the spgemm_batched API ----------------------------------------------
+
+
+def test_spgemm_batched_matches_per_element_and_hits_cache():
+    plan_cache_clear()
+    a = random_powerlaw_csc(50, 3.0, seed=7)
+    mats, bb = _stacked(a, batch=3)
+    got = spgemm_batched(bb, bb, method="spars-40/40")
+    assert plan_cache_info()["misses"] == 1
+    for g, m_ in zip(got, mats):
+        assert _bit_identical(g, spgemm(m_, m_, method="spars-40/40"))
+    # second batched call on the same pattern reuses the cached plan
+    spgemm_batched(bb, bb, method="spars-40/40")
+    assert plan_cache_info()["hits"] >= 2
+    plan_cache_clear()
+
+
+def test_spgemm_batched_plan_kwarg_accepts_raw_stacks():
+    a = random_uniform_csc(36, 3, seed=8)
+    plan = plan_spgemm(a, a, "hash-256/256")
+    vals = np.random.default_rng(0).normal(size=(2, a.nnz))
+    got = spgemm_batched(vals, vals, plan=plan)
+    for b in range(2):
+        assert _bit_identical(got[b], plan.execute(vals[b], vals[b]))
+
+
+def test_spgemm_batched_rejects_non_batched_operands():
+    a = random_uniform_csc(36, 3, seed=9)
+    with pytest.raises(TypeError, match="BatchedCSC"):
+        spgemm_batched(a, a, method="spa")
+    _, bb = _stacked(a, batch=2)
+    _, bb3 = _stacked(a, batch=3)
+    with pytest.raises(ValueError, match="batch mismatch"):
+        spgemm_batched(bb, bb3, method="spa")
+
+
+def test_execute_batched_rejects_malformed_batches():
+    a = random_uniform_csc(36, 3, seed=10)
+    plan = plan_spgemm(a, a, "spa")
+    ok = np.zeros((2, a.nnz))
+    with pytest.raises(ValueError, match="batch mismatch"):
+        plan.execute_batched(ok, np.zeros((3, a.nnz)))
+    with pytest.raises(ValueError, match=r"\[B, nnz\]"):
+        plan.execute_batched(np.zeros(a.nnz), ok)     # 1-D: use execute()
+    with pytest.raises(ValueError):
+        plan.execute_batched(np.zeros((2, a.nnz - 1)), ok)  # short values
+
+
+# --- BatchedCSC semantics -------------------------------------------------
+
+
+def test_batched_csc_stack_roundtrip():
+    a = random_powerlaw_csc(30, 3.0, seed=11)
+    mats, bb = _stacked(a, batch=4)
+    assert bb.batch == 4 and bb.nnz == a.nnz and bb.shape == a.shape
+    for b, m_ in enumerate(mats):
+        assert _bit_identical(bb[b], m_)
+    for u, m_ in zip(bb.unstack(), mats):
+        assert _bit_identical(u, m_)
+    # from_values binds a raw stack to an existing pattern
+    vals = np.stack([np.asarray(m_.values) for m_ in mats])
+    bb2 = BatchedCSC.from_values(a, vals)
+    assert _bit_identical(bb2[1], mats[1])
+
+
+def test_batched_csc_stack_rejects_mismatched_patterns():
+    a = random_powerlaw_csc(30, 3.0, seed=12)
+    b = random_powerlaw_csc(30, 3.0, seed=13)
+    with pytest.raises(ValueError, match="patterns differ"):
+        BatchedCSC.stack([a, b])
+    with pytest.raises(ValueError, match="at least one"):
+        BatchedCSC.stack([])
+    with pytest.raises(ValueError):
+        BatchedCSC.from_values(a, np.zeros(a.nnz))    # not [B, nnz]

@@ -1,0 +1,172 @@
+"""Differential SpGEMM harness: every method × both backends against an
+*external* oracle — ``scipy.sparse`` when available, the dense reference
+otherwise — on random and adversarial sparsity patterns (empty columns,
+all-dense columns, single-row support, duplicate-heavy products), not just
+the hand-picked cases of the per-algorithm tests.
+
+The hypothesis property sweep piggybacks when the optional dev dependency is
+installed (guarded import); the adversarial fixed cases always run.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, spgemm, spgemm_dense
+from repro.sparse import (
+    random_density_csc, random_powerlaw_csc, random_uniform_csc, validate_csc,
+)
+from repro.sparse.format import CSC, csc_from_dense, csc_to_dense
+
+try:  # optional; CI runs both with and without
+    import scipy.sparse as _sps
+
+    HAVE_SCIPY = True
+except ImportError:  # pragma: no cover - exercised by the minimal CI leg
+    _sps = None
+    HAVE_SCIPY = False
+
+try:  # optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+PALLAS_METHODS = [m for m in ALGORITHMS if m not in ("esc", "expand")]
+
+
+def oracle_product(a: CSC, b: CSC) -> np.ndarray:
+    """Dense C = A @ B from an implementation that shares no code with the
+    executors under test (scipy if present, else the densified reference)."""
+    if HAVE_SCIPY:
+        sa = _sps.csc_matrix(
+            (np.asarray(a.values)[: a.nnz],
+             np.asarray(a.row_indices)[: a.nnz], np.asarray(a.col_ptr)),
+            shape=a.shape)
+        sb = _sps.csc_matrix(
+            (np.asarray(b.values)[: b.nnz],
+             np.asarray(b.row_indices)[: b.nnz], np.asarray(b.col_ptr)),
+            shape=b.shape)
+        return np.asarray((sa @ sb).todense())
+    return csc_to_dense(spgemm_dense(a, b))
+
+
+def _mask_dense(dense, seed):
+    return csc_from_dense(np.asarray(dense, np.float64))
+
+
+def _adversarial(name: str, seed: int = 0):
+    """(a, b) operand pairs stressing structural edge paths."""
+    rng = np.random.default_rng(seed)
+    if name == "random":
+        a = random_powerlaw_csc(36, 3.0, seed=seed)
+        return a, a
+    if name == "empty_cols":
+        # half of B's columns empty, plus empty A columns referenced nowhere
+        d = rng.normal(size=(32, 32)) * (rng.uniform(size=(32, 32)) < 0.15)
+        d[:, ::2] = 0.0
+        d[5] = 0.0
+        a = _mask_dense(d, seed)
+        return a, a
+    if name == "all_dense_cols":
+        # every column fully dense: maximal Op_j, single SPA-regime block
+        d = rng.normal(size=(20, 20))
+        a = _mask_dense(d, seed)
+        return a, a
+    if name == "single_row":
+        # all support in one row: every product lands on output row 3
+        d = np.zeros((24, 24))
+        d[3] = rng.normal(size=24)
+        d[3, 3] = 1.5  # keep (3,3) nonzero so A@A has support
+        a = _mask_dense(d, seed)
+        return a, a
+    if name == "dup_heavy":
+        # few distinct rows shared by every column: duplicate-heavy products
+        d = np.zeros((24, 24))
+        d[:4] = rng.normal(size=(4, 24))
+        d[np.abs(d) < 0.3] = 0.0
+        d[0, :] = 1.0  # row 0 dense: every output column accumulates 24 hits
+        a = _mask_dense(d, seed)
+        b_d = np.zeros((24, 24))
+        b_d[:4] = rng.normal(size=(4, 24))
+        return a, _mask_dense(b_d, seed)
+    if name == "empty":
+        a = csc_from_dense(np.zeros((16, 16)))
+        return a, a
+    if name == "empty_a":
+        # A has no stored entries at all, B is full: every lane's stream is
+        # nothing but empty-A-column references
+        return csc_from_dense(np.zeros((12, 12))), \
+            csc_from_dense(rng.normal(size=(12, 12)))
+    if name == "rect_chain":
+        a = random_density_csc(18, 30, 0.12, seed=seed)
+        b = random_density_csc(30, 11, 0.2, seed=seed + 1)
+        return a, b
+    raise AssertionError(name)
+
+
+CASES = ("random", "empty_cols", "all_dense_cols", "single_row",
+         "dup_heavy", "empty", "empty_a", "rect_chain")
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("method", sorted(ALGORITHMS))
+def test_differential_host(method, case):
+    a, b = _adversarial(case)
+    c = spgemm(a, b, method=method, cache=False)
+    validate_csc(c)
+    np.testing.assert_allclose(
+        csc_to_dense(c), oracle_product(a, b), rtol=1e-9, atol=1e-11,
+        err_msg=f"{method} diverged from the oracle on {case!r}")
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("method", sorted(PALLAS_METHODS))
+def test_differential_pallas(method, case):
+    a, b = _adversarial(case)
+    c = spgemm(a, b, method=method, backend="pallas", cache=False)
+    validate_csc(c)
+    np.testing.assert_allclose(
+        csc_to_dense(c), oracle_product(a, b), rtol=1e-4, atol=1e-5,
+        err_msg=f"pallas {method} diverged from the oracle on {case!r}")
+
+
+def test_oracle_is_external():
+    """The harness must diff against scipy whenever scipy is importable."""
+    if not HAVE_SCIPY:
+        pytest.skip("scipy absent; oracle falls back to the dense reference")
+    a = random_uniform_csc(20, 2, seed=0)
+    np.testing.assert_allclose(
+        oracle_product(a, a), csc_to_dense(spgemm_dense(a, a)),
+        rtol=1e-12, atol=0)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        seed=st.integers(0, 10_000),
+        n=st.integers(8, 40),
+        density=st.floats(0.0, 0.35),
+        method=st.sampled_from(sorted(ALGORITHMS)),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_property_differential_host(seed, n, density, method):
+        a = random_density_csc(n, n, density, seed=seed)
+        b = random_density_csc(n, n, density, seed=seed + 1)
+        c = spgemm(a, b, method=method, cache=False)
+        validate_csc(c)
+        np.testing.assert_allclose(
+            csc_to_dense(c), oracle_product(a, b), rtol=1e-9, atol=1e-11)
+
+    @given(
+        seed=st.integers(0, 10_000),
+        z=st.integers(0, 5),
+        method=st.sampled_from(["spa", "spars-16/64", "h-hash-32/256"]),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_property_differential_pallas(seed, z, method):
+        a = random_uniform_csc(24, z, seed=seed)
+        c = spgemm(a, a, method=method, backend="pallas", cache=False)
+        validate_csc(c)
+        np.testing.assert_allclose(
+            csc_to_dense(c), oracle_product(a, a), rtol=1e-4, atol=1e-5)

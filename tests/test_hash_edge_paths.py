@@ -1,0 +1,192 @@
+"""Hash-accumulator edge paths (Section 3.2), host oracle and Pallas kernel:
+full-load collision chains, exactly-full tables (the MAX_PROBES == H bound),
+empty-A-column step consumption, and the degenerate b_min == b_max grouping
+of the h-hash hybrids."""
+
+import numpy as np
+import pytest
+
+from repro.core import HASH_C, hash_numpy, hash_table_size, preprocess, \
+    spgemm, spgemm_dense
+from repro.sparse import random_powerlaw_csc, random_uniform_csc
+from repro.sparse.format import (
+    csc_equal, csc_from_dense, csc_to_dense, validate_csc,
+)
+
+
+def _colliding_rows(h: int, count: int, m: int) -> np.ndarray:
+    """``count`` distinct rows < m that all hash to the same slot of an
+    h-slot table.  h(i) = (i * HASH_C) % h is bijective mod h (HASH_C odd),
+    so rows congruent mod h collide exactly."""
+    rows = np.arange(0, count) * h + 1
+    assert rows.max() < m and len(set((rows * HASH_C) % h)) == 1
+    return rows
+
+
+def _single_chain_case(count: int, table: int, n_cols: int | None = None):
+    """A @ B whose populated C columns are built from one collision chain:
+    A column 0 holds ``count`` rows that all probe to the same slot of a
+    ``table``-slot hash table; three B columns reference A column 0 once."""
+    m = table * count + 2
+    k = n_cols if n_cols is not None else m
+    rows = _colliding_rows(table, count, m)
+    a_dense = np.zeros((m, k))
+    a_dense[rows, 0] = np.arange(1.0, count + 1)
+    b_dense = np.zeros((k, k))
+    b_dense[0, :3] = (2.0, -1.0, 0.5)     # three C columns, same chain
+    return csc_from_dense(a_dense), csc_from_dense(b_dense)
+
+
+@pytest.mark.parametrize("h", [4, 8, 16])
+def test_hash_numpy_high_load_collision_chain(h):
+    """Maximal planner-sized load ((h-1)/h, every key in one probe chain):
+    insertion and the read-back probe loop must both terminate and stay
+    exact.  h-1 keys congruent mod h chain through h-1 of the h slots."""
+    a, b = _single_chain_case(h - 1, table=h)
+    pre = preprocess(a, b, t=np.inf, b_min=4, b_max=4)
+    # sizing invariant: H is the power of two strictly above max Op_j, so a
+    # planner-sized table is never exactly full — (h-1)/h is the ceiling
+    assert int(pre.hash_sizes[0]) == h == hash_table_size(h - 1)
+    c = hash_numpy(a, b, pre)
+    validate_csc(c)
+    assert csc_equal(c, spgemm_dense(a, b), rtol=1e-12, atol=0)
+    # the chain really is maximal: each C column holds all h-1 entries
+    assert np.diff(np.asarray(c.col_ptr))[:3].tolist() == [h - 1] * 3
+
+
+@pytest.mark.parametrize("h", [2, 4, 8])
+def test_hash_numpy_exactly_full_table(h):
+    """White-box table-full path: force H == number of distinct colliding
+    keys (below what the planner would size), so every slot fills and the
+    probe wraps the whole table; must terminate and stay exact."""
+    import dataclasses
+
+    a, b = _single_chain_case(h, table=h)
+    pre = preprocess(a, b, t=np.inf, b_min=4, b_max=4)
+    assert int(pre.hash_sizes[0]) == 2 * h      # planner would size 2h
+    full = dataclasses.replace(
+        pre, hash_sizes=np.full(pre.blocks.n_blocks, h, np.int64))
+    c = hash_numpy(a, b, full)
+    validate_csc(c)
+    assert csc_equal(c, spgemm_dense(a, b), rtol=1e-12, atol=0)
+
+
+@pytest.mark.parametrize("h", [2, 4, 8])
+def test_hash_kernel_exactly_full_table(h):
+    """Same exactly-full chain through the Pallas kernel, called directly
+    with H == chain length: MAX_PROBES == H is an exact bound, so a full
+    table must still resolve every key within one sweep."""
+    import jax.numpy as jnp
+
+    from repro.kernels.hash_spgemm import hash_spgemm
+    from repro.kernels.ref import hash_tables_to_dense
+    from repro.sparse import csc_to_padded_columns, steps_per_column
+
+    block = 8
+    m = h * h + 2
+    a, b = _single_chain_case(h, table=h, n_cols=block)
+    ar, av, an = (jnp.asarray(x) for x in csc_to_padded_columns(a))
+    br, bv, bn = (jnp.asarray(x) for x in csc_to_padded_columns(b))
+    steps = jnp.asarray([int(steps_per_column(a, b).max())], jnp.int32)
+    keys, vals = hash_spgemm(
+        ar, jnp.asarray(av, jnp.float32), an,
+        br, jnp.asarray(bv, jnp.float32), bn,
+        steps, m=m, h=h, block_cols=block)
+    got = np.asarray(hash_tables_to_dense(keys, vals, m))
+    want = csc_to_dense(spgemm_dense(a, b)).astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # the first lane's table is exactly full
+    assert (np.asarray(keys)[:, 0] >= 0).all()
+
+
+def test_hash_numpy_accumulates_through_collisions():
+    """Repeated (row, col) products must accumulate in-place even when the
+    key sits at the end of a probe chain."""
+    h = 4
+    m = h * h + 2
+    rows = _colliding_rows(h, h, m)
+    a_dense = np.zeros((m, m))
+    a_dense[rows, 0] = 1.0
+    a_dense[rows, 1] = 10.0               # same rows via a second A column
+    b_dense = np.zeros((m, m))
+    b_dense[0, 0] = 1.0
+    b_dense[1, 0] = 1.0                   # C col 0 = A col 0 + A col 1
+    a, b = csc_from_dense(a_dense), csc_from_dense(b_dense)
+    c = hash_numpy(a, b, preprocess(a, b, t=np.inf, b_min=4, b_max=4))
+    got = csc_to_dense(c)
+    assert (got[rows, 0] == 11.0).all()
+    assert csc_equal(c, spgemm_dense(a, b), rtol=1e-12, atol=0)
+
+
+def test_hash_numpy_empty_a_column_consumes_b_entry():
+    """B entries referencing empty A columns yield no products but must not
+    derail the lane cursors (regression: IndexError / lost products)."""
+    m = 12
+    a_dense = np.zeros((m, m))
+    a_dense[1, 3] = 2.0                    # only A column 3 is non-empty
+    b_dense = np.zeros((m, m))
+    b_dense[0, 5] = 1.0                    # empty A col 0, consumed first
+    b_dense[3, 5] = 4.0                    # then the real product
+    b_dense[7, 5] = 1.0                    # empty A col 7, consumed last
+    a, b = csc_from_dense(a_dense), csc_from_dense(b_dense)
+    for method in ("hash-256/256", "spars-40/40", "h-hash-32/256"):
+        c = spgemm(a, b, method=method, cache=False)
+        assert csc_equal(c, spgemm_dense(a, b), rtol=1e-12, atol=0), method
+        for backend_method in (method,):
+            cp = spgemm(a, b, method=backend_method, backend="pallas",
+                        cache=False)
+            assert csc_equal(cp, spgemm_dense(a, b), rtol=1e-5,
+                             atol=1e-6), method
+
+
+def test_h_hash_degenerate_equal_block_bounds():
+    """b_min == b_max: the blocking loop's grow phase never fires; every
+    block is exactly b_min wide (except the tail) and execution stays exact
+    on both backends."""
+    a = random_powerlaw_csc(50, 3.0, seed=3)
+    params_h = dict(t=40.0, b_min=8, b_max=8)
+    pre = preprocess(a, a, **params_h)
+    sizes = pre.blocks.sizes
+    assert (sizes[:-1] == 8).all() and sizes[-1] <= 8
+    ref = spgemm_dense(a, a)
+    c_host = spgemm(a, a, method="h-hash-256/256", t=40.0, b_min=8, b_max=8,
+                    cache=False)
+    assert csc_equal(c_host, ref, rtol=1e-9, atol=1e-11)
+    c_pal = spgemm(a, a, method="h-hash-256/256", t=40.0, b_min=8, b_max=8,
+                   backend="pallas", cache=False)
+    assert csc_equal(c_pal, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_h_hash_b_min_eq_b_max_single_spa_regime():
+    """Degenerate grouping where t sends *every* column to one side: t=0 puts
+    all columns in the blocked tail; t=inf-like large t puts all in SPA."""
+    a = random_uniform_csc(40, 3, seed=4)
+    ref = spgemm_dense(a, a)
+    all_blocked = spgemm(a, a, method="h-hash-256/256", t=1e9, cache=False)
+    assert csc_equal(all_blocked, ref, rtol=1e-9, atol=1e-11)
+    pre = preprocess(a, a, t=1e9, b_min=256, b_max=256)
+    assert pre.split == 0                  # nothing reaches the SPA head
+
+
+def test_hash_sizes_monotone_and_exact_po2():
+    """Section 3.2 invariants the kernel relies on: per-block H is a power
+    of two >= the block's max Op_j, and never grows along sorted blocks."""
+    a = random_powerlaw_csc(80, 4.0, seed=5)
+    pre = preprocess(a, a, t=np.inf, b_min=8, b_max=8)
+    hs = pre.hash_sizes
+    assert ((hs & (hs - 1)) == 0).all()
+    assert (np.diff(hs) <= 0).all()
+    for i, (s, z) in enumerate(pre.blocks):
+        assert hs[i] >= pre.ops_sorted[s]   # every block's keys always fit
+
+
+def test_hash_kernel_rejects_non_power_of_two_table():
+    from repro.kernels.hash_spgemm import hash_spgemm
+    import jax.numpy as jnp
+
+    z = jnp.zeros((16, 2), jnp.int32)
+    v = jnp.zeros((16, 2), jnp.float32)
+    n = jnp.zeros(16, jnp.int32)
+    with pytest.raises(AssertionError, match="power of two"):
+        hash_spgemm(z, v, n, z, v, n, jnp.zeros(1, jnp.int32),
+                    m=16, h=3, block_cols=16)

@@ -102,6 +102,75 @@ def test_execute_rejects_mismatched_operands():
     assert bigger.nnz != a.nnz
     with pytest.raises(ValueError, match="pattern does not match"):
         spgemm(bigger, bigger, plan=plan)
+    # a [B, nnz] stack belongs to execute_batched, not execute
+    stack = np.zeros((3, a.nnz))
+    with pytest.raises(ValueError, match="execute_batched"):
+        plan.execute(stack, stack)
+
+
+def _colliding_pair(n=16):
+    """Two patterns with identical (shape, nnz) — and even col_ptr — but
+    different row structure: the O(1) compatibility check cannot tell them
+    apart."""
+    a = csc_from_dense(np.eye(n))
+    b = csc_from_dense(np.roll(np.eye(n), 1, axis=0))
+    assert a.shape == b.shape and a.nnz == b.nnz
+    assert np.array_equal(np.asarray(a.col_ptr), np.asarray(b.col_ptr))
+    return a, b
+
+
+def test_validate_fingerprint_rejects_corrupt_pattern():
+    a, corrupt = _colliding_pair()
+    plan = plan_spgemm(a, a, "hash-256/256")
+    # the O(1) default accepts the wrong pattern silently (documented hole)
+    plan.execute(corrupt, corrupt)
+    # the opt-in O(nnz) re-hash catches it, on both entry points
+    with pytest.raises(ValueError, match="fingerprint"):
+        plan.execute(corrupt, corrupt, validate="fingerprint")
+    with pytest.raises(ValueError, match="fingerprint"):
+        spgemm(corrupt, corrupt, plan=plan, validate="fingerprint")
+    # a matching operand passes validation with an unchanged result
+    ok = plan.execute(a, a, validate="fingerprint")
+    assert _bit_identical(ok, plan.execute(a, a))
+    # raw value arrays carry no structure: validation is vacuous for them
+    vals = np.asarray(a.values)
+    plan.execute(vals, vals, validate="fingerprint")
+    with pytest.raises(ValueError, match="validate"):
+        plan.execute(a, a, validate="bogus")
+
+
+def test_validate_fingerprint_batched():
+    from repro.sparse import BatchedCSC
+
+    a, corrupt = _colliding_pair()
+    plan = plan_spgemm(a, a, "spa")
+    bad = BatchedCSC.stack([corrupt, corrupt])
+    plan.execute_batched(bad, bad)               # O(1) check passes
+    with pytest.raises(ValueError, match="fingerprint"):
+        plan.execute_batched(bad, bad, validate="fingerprint")
+    good = BatchedCSC.stack([a, a])
+    got = plan.execute_batched(good, good, validate="fingerprint")
+    assert _bit_identical(got[0], plan.execute(a, a))
+
+
+def test_plan_cache_distinct_entries_for_colliding_shape_nnz():
+    """Two patterns that collide on every O(1) statistic (shape, nnz, even
+    col_ptr) must still occupy distinct LRU entries and execute correctly."""
+    plan_cache_clear()
+    a, b = _colliding_pair()
+    assert pattern_fingerprint(a) != pattern_fingerprint(b)
+    ca = spgemm(a, a, method="spa")
+    cb = spgemm(b, b, method="spa")
+    info = plan_cache_info()
+    assert (info["hits"], info["misses"], info["size"]) == (0, 2, 2)
+    assert csc_equal(ca, spgemm_dense(a, a), rtol=1e-12, atol=0)
+    assert csc_equal(cb, spgemm_dense(b, b), rtol=1e-12, atol=0)
+    assert not csc_equal(ca, cb)                 # the results really differ
+    # re-running hits each pattern's own entry
+    assert _bit_identical(spgemm(a, a, method="spa"), ca)
+    assert _bit_identical(spgemm(b, b, method="spa"), cb)
+    assert plan_cache_info()["hits"] == 2
+    plan_cache_clear()
 
 
 # --- plan cache hit/miss behavior ----------------------------------------

@@ -56,6 +56,33 @@ def test_sparse_ffn_flop_savings_monotone():
         assert np.isfinite(np.asarray(y)).all()
 
 
+def test_sparse_matmul_batched_matches_loop():
+    """One vmapped launch over [B, K, N] == the per-sample Python loop, on
+    both execution paths (dense and BSR)."""
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(32, 48)).astype(np.float32)
+    xs = jnp.asarray(rng.normal(size=(3, 48, 16)).astype(np.float32))
+    for keep, path in ((0.9, "dense"), (0.2, "bsr")):
+        m = SparseMatmul.from_dense(w, bm=8, bk=8, keep_density=keep,
+                                    t_density=0.75)
+        assert m.path == path
+        got = np.asarray(m.batched(xs, bn=16))
+        want = np.stack([np.asarray(m(xs[b], bn=16)) for b in range(3)])
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_sparse_ffn_batched_matches_loop():
+    cfg = smoke(ARCHS["granite-20b"])
+    params = init_model(cfg, KEY)
+    p = jax.tree_util.tree_map(lambda l: l[0], params["blocks"]["l0"]["ffn"])
+    sp = SparseFFN.from_params(p, keep_density=0.3, t_density=0.75)
+    xs = jax.random.normal(KEY, (2, 6, cfg.d_model))
+    got = np.asarray(sp(xs))
+    want = np.stack([np.asarray(sp(xs[b])) for b in range(2)])
+    assert got.shape == (2, 6, cfg.d_model)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
 def test_sparse_ffn_high_density_matches_dense():
     cfg = smoke(ARCHS["granite-20b"])
     params = init_model(cfg, KEY)
