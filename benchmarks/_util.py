@@ -1,0 +1,32 @@
+"""Shared benchmark machinery: timing, result verification, JSON reports.
+
+Every ``benchmarks/*.py`` script used to re-implement its own
+``median_time`` / bit-identity check / JSON writer; they now share this
+module (ISSUE 3 satellite).  Import as ``from _util import ...`` — the
+scripts are run as files, so the benchmarks directory is on ``sys.path``.
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import time
+
+from repro.sparse.format import csc_bit_identical as bit_identical  # noqa: F401
+
+
+def median_time(fn, reps: int) -> float:
+    """Median wall time of ``reps`` calls of ``fn`` (seconds)."""
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    return statistics.median(out)
+
+
+def write_report(path: str, report: dict) -> None:
+    """Write a benchmark report as indented JSON and announce it."""
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\nwrote {path}")

@@ -22,40 +22,18 @@ pattern-reuse workload (host spa — the vectorized value-axis executor).
 from __future__ import annotations
 
 import argparse
-import json
-import statistics
 import sys
-import time
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
+from _util import bit_identical, median_time, write_report
 from repro.core import plan_spgemm
 from repro.sparse import random_powerlaw_csc
 
 REQUIRED_SPEEDUP = 3.0
 CRITERION_WORKLOAD = ("spa", "host")   # the vectorized pattern-reuse path
-
-
-def median_time(fn, reps):
-    out = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        out.append(time.perf_counter() - t0)
-    return statistics.median(out)
-
-
-def _bit_identical(x, y) -> bool:
-    return (
-        x.shape == y.shape
-        and np.array_equal(np.asarray(x.col_ptr), np.asarray(y.col_ptr))
-        and np.array_equal(np.asarray(x.row_indices)[: x.nnz],
-                           np.asarray(y.row_indices)[: y.nnz])
-        and np.array_equal(np.asarray(x.values)[: x.nnz],
-                           np.asarray(y.values)[: y.nnz])
-    )
 
 
 def bench_one(a, method, backend, batch, reps, *, block_cols=None,
@@ -71,7 +49,7 @@ def bench_one(a, method, backend, batch, reps, *, block_cols=None,
     looped = [plan.execute(vals[b], vals[b]) for b in range(batch)]  # warmup
     stats = {}
     batched = plan.execute_batched(vals, vals, stats=stats)          # warmup
-    identical = all(_bit_identical(x, y) for x, y in zip(looped, batched))
+    identical = all(bit_identical(x, y) for x, y in zip(looped, batched))
 
     t_loop = median_time(
         lambda: [plan.execute(vals[b], vals[b]) for b in range(batch)], reps)
@@ -144,9 +122,7 @@ def main():
             "passed": ok,
         },
     }
-    with open(args.out, "w") as f:
-        json.dump(report, f, indent=2)
-    print(f"\nwrote {args.out}")
+    write_report(args.out, report)
     print(f"criterion: {report['criterion']['workload']} at B={args.batch} "
           f"-> {crit['speedup']:.1f}x (need >= {REQUIRED_SPEEDUP}x) "
           f"{'PASS' if ok else 'FAIL'}")

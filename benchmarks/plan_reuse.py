@@ -22,26 +22,16 @@ lower than planning from scratch, i.e. ``t_plan / t_bind >= 2``.
 from __future__ import annotations
 
 import argparse
-import statistics
 import sys
-import time
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
+from _util import median_time
 from repro.core import plan_spgemm, spgemm
 from repro.core.api import _cached_plan, plan_cache_clear, resolve_params
 from repro.sparse import random_powerlaw_csc
-
-
-def median_time(fn, reps):
-    out = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        out.append(time.perf_counter() - t0)
-    return statistics.median(out)
 
 
 def bench_overhead(a, method, backend, reps, header=False):

@@ -1,0 +1,209 @@
+"""Tiled auto-method SpGEMM benchmark (DESIGN.md §8).
+
+Workload: a mixed-density multiply — B carries a dense column block whose
+entries reference A's heavy columns (huge flops per stored entry: the SPA
+regime) and a long sparse tail referencing A's light columns (thousands of
+nearly-empty columns: the expand regime).  No single fixed method is right
+for both; ``method="auto"`` tiles the operands and lets the cost model pick
+per tile.
+
+Each method is timed in the plan-reuse regime (symbolic phase held, numeric
+phase timed), and the per-tile choices of the auto plan are recorded to
+``BENCH_tiled.json`` so later PRs can track the trajectory.
+
+PASS criterion (ISSUE 3): the auto plan picks >= 2 distinct per-tile
+methods on the mixed-density matrix AND matches or beats the best fixed
+candidate method end-to-end (<= 1.05x its numeric-phase time).
+
+    PYTHONPATH=src python benchmarks/tiled.py [--smoke] [--out PATH]
+    PYTHONPATH=src python benchmarks/tiled.py --calibrate   # cost constants
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from _util import median_time, write_report
+from repro.core import plan_spgemm, plan_spgemm_tiled
+from repro.sparse.format import CSC, csc_from_dense, csc_to_dense
+
+FIXED_METHODS = ("spa", "expand")     # == the host auto candidate set
+REQUIRED_RATIO = 1.05                 # auto <= 1.05x best fixed
+
+
+def mixed_density_pair(m: int, n_sparse: int, dense_a: int, dense_b: int,
+                       per_dense: int, seed: int = 0):
+    """(A, B): A has ``dense_a`` full columns + 2-nnz tail; B has
+    ``dense_b`` columns of ``per_dense`` entries hitting A's heavy columns
+    + ``n_sparse`` 2-entry columns hitting the light ones."""
+    rng = np.random.default_rng(seed)
+    k = m
+    ad = np.zeros((m, k))
+    ad[:, :dense_a] = rng.uniform(0.5, 1.5, size=(m, dense_a))
+    for j in range(dense_a, k):
+        ad[rng.integers(m, size=2), j] = rng.uniform(0.5, 1.5, size=2)
+    n = dense_b + n_sparse
+    bd = np.zeros((k, n))
+    for j in range(dense_b):
+        rows = rng.choice(dense_a, size=min(per_dense, dense_a),
+                          replace=False)
+        bd[rows, j] = rng.uniform(0.5, 1.5, size=len(rows))
+    for j in range(dense_b, n):
+        rows = dense_a + rng.integers(k - dense_a, size=2)
+        bd[rows, j] = rng.uniform(0.5, 1.5, size=2)
+    return csc_from_dense(ad), csc_from_dense(bd)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--n-sparse", type=int, default=4032)
+    ap.add_argument("--dense-a", type=int, default=32)
+    ap.add_argument("--dense-b", type=int, default=64)
+    ap.add_argument("--per-dense", type=int, default=32)
+    ap.add_argument("--tile-n", type=int, default=1024)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_tiled.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small matrices, 2 reps)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure host cost-model constants and exit")
+    args = ap.parse_args()
+    if args.calibrate:
+        return calibrate()
+    if args.smoke:
+        args.m, args.n_sparse = 128, 496
+        args.dense_a = args.dense_b = args.per_dense = 16
+        args.tile_n, args.reps = 128, 2
+
+    a, b = mixed_density_pair(args.m, args.n_sparse, args.dense_a,
+                              args.dense_b, args.per_dense)
+    print(f"mixed-density workload: A {a.shape} nnz={a.nnz}, "
+          f"B {b.shape} nnz={b.nnz}, reps={args.reps}\n")
+
+    results = {}
+    print(f"{'method':12s} {'numeric/call':>13s}")
+    for method in FIXED_METHODS:
+        plan = plan_spgemm(a, b, method)
+        tt = median_time(lambda: plan.execute(a, b), args.reps)
+        results[method] = {"t_exec_ms": tt * 1e3}
+        print(f"{method:12s} {tt*1e3:12.2f}ms")
+
+    tile = (None, args.tile_n)
+    t_build = median_time(
+        lambda: plan_spgemm_tiled(a, b, tile=tile, cache=False), 1)
+    auto_plan = plan_spgemm_tiled(a, b, tile=tile)
+    stats = {}
+    c_auto = auto_plan.execute(a, b, stats=stats)
+    t_auto = median_time(lambda: auto_plan.execute(a, b), args.reps)
+    results["auto"] = {
+        "t_exec_ms": t_auto * 1e3,
+        "t_plan_ms": t_build * 1e3,
+        "grid": list(auto_plan.grid),
+        "tile_methods": stats["tiles"],
+        "methods": stats["methods"],
+    }
+    print(f"{'auto':12s} {t_auto*1e3:12.2f}ms   "
+          f"grid={auto_plan.grid} methods={stats['methods']}")
+
+    # correctness gate before the timing is trusted
+    ref = csc_to_dense(plan_spgemm(a, b, "spa").execute(a, b))
+    ok_value = np.allclose(csc_to_dense(c_auto), ref, rtol=1e-9, atol=1e-11)
+
+    best_fixed = min(FIXED_METHODS, key=lambda m: results[m]["t_exec_ms"])
+    ratio = results["auto"]["t_exec_ms"] / results[best_fixed]["t_exec_ms"]
+    distinct = len(stats["methods"])
+    ok = ok_value and distinct >= 2 and ratio <= REQUIRED_RATIO
+    report = {
+        "bench": "tiled",
+        "config": {"m": args.m, "n_sparse": args.n_sparse,
+                   "dense_a": args.dense_a, "dense_b": args.dense_b,
+                   "per_dense": args.per_dense, "tile_n": args.tile_n,
+                   "reps": args.reps, "smoke": args.smoke},
+        "results": results,
+        "criterion": {
+            "best_fixed": best_fixed,
+            "auto_vs_best_fixed": ratio,
+            "required_ratio": REQUIRED_RATIO,
+            "distinct_methods": distinct,
+            "values_match": ok_value,
+            "passed": ok,
+        },
+    }
+    write_report(args.out, report)
+    print(f"criterion: auto {ratio:.2f}x of best fixed ({best_fixed}), "
+          f"{distinct} distinct per-tile methods "
+          f"-> {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+# ---------------------------------------------------------------------------
+# cost-constant calibration (source of core/cost.py's defaults)
+# ---------------------------------------------------------------------------
+
+
+def calibrate():
+    """Measure the host executors' cost structure and print a
+    ``CostConstants`` literal for ``core/cost.py``."""
+    from repro.core.naive import spa_numpy
+    from repro.core.expand import spgemm_expand
+
+    rng = np.random.default_rng(0)
+
+    def best_of(fn, reps=5):
+        return min(median_time(fn, 1) for _ in range(reps))
+
+    # per-column loop overhead: all-empty B columns
+    n = 4000
+    a0 = csc_from_dense(np.zeros((64, 64)))
+    b0 = CSC(np.zeros(0), np.zeros(0, np.int32),
+             np.zeros(n + 1, np.int32), (64, n))
+    spa_col = best_of(lambda: spa_numpy(a0, b0)) / n
+
+    # per-B-entry cost: A with one nnz per column (flops ~ nnz_b)
+    k, n = 256, 2000
+    ad = np.zeros((k, k))
+    ad[0, :] = 1.0
+    a1 = csc_from_dense(ad)
+    bd = np.zeros((k, n))
+    for j in range(n):
+        bd[rng.integers(k, size=4), j] = 1.0
+    b1 = csc_from_dense(bd)
+    spa_entry = (best_of(lambda: spa_numpy(a1, b1))
+                 - spa_col * n) / b1.nnz
+
+    # per-product cost: fully dense A (every B entry triggers m products)
+    m, n = 1024, 256
+    a2 = csc_from_dense(np.ones((m, m)))
+    bd = np.zeros((m, n))
+    for j in range(n):
+        bd[rng.integers(m, size=8), j] = 1.0
+    b2 = csc_from_dense(bd)
+    flops = b2.nnz * m
+    spa_flop = (best_of(lambda: spa_numpy(a2, b2), reps=3)
+                - spa_col * n - spa_entry * b2.nnz) / flops
+
+    # expand: per-product cost at a large product stream; split off a
+    # log2-proportional sort share (the lexsort term)
+    t_exp = best_of(lambda: spgemm_expand(a2, b2), reps=3)
+    per_prod = t_exp / flops
+    expand_sort = 8.0e-9
+    expand_prod = max(per_prod - expand_sort * np.log2(flops), 1e-9)
+
+    print("measured host constants (paste into core/cost.py):")
+    print("CostConstants(")
+    print(f"    spa_col={spa_col:.1e}, spa_entry={spa_entry:.1e}, "
+          f"spa_flop={spa_flop:.1e},")
+    print(f"    expand_base=1.0e-4, expand_prod={expand_prod:.1e}, "
+          f"expand_sort={expand_sort:.1e},")
+    print(")")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,17 +21,27 @@ from repro.core.naive import (
     spars_numpy,
 )
 from repro.core.reference import dense_product, spgemm_dense
+from repro.core.cost import (
+    AUTO_CANDIDATES,
+    CostConstants,
+    choose_method,
+    estimate_cost,
+)
 from repro.core.planner import (
     SpgemmPlan,
+    TiledSpgemmPlan,
     pattern_fingerprint,
     plan_spgemm,
+    plan_spgemm_tiled,
 )
 from repro.core.executor import execute as execute_plan
 from repro.core.executor import execute_batched as execute_plan_batched
+from repro.core.executor import execute_tiled, execute_tiled_batched
 from repro.core.api import (
     ALGORITHMS,
     plan_cache_clear,
     plan_cache_info,
+    plan_cache_resize,
     spgemm,
     spgemm_batched,
 )
@@ -58,13 +68,22 @@ __all__ = [
     "dense_product",
     "spgemm_dense",
     "SpgemmPlan",
+    "TiledSpgemmPlan",
     "pattern_fingerprint",
     "plan_spgemm",
+    "plan_spgemm_tiled",
     "execute_plan",
     "execute_plan_batched",
+    "execute_tiled",
+    "execute_tiled_batched",
     "plan_cache_clear",
     "plan_cache_info",
+    "plan_cache_resize",
     "spgemm",
     "spgemm_batched",
     "ALGORITHMS",
+    "AUTO_CANDIDATES",
+    "CostConstants",
+    "choose_method",
+    "estimate_cost",
 ]

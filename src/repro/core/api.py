@@ -1,35 +1,51 @@
 """Public SpGEMM API: ``spgemm(A, B, method=...)`` over cached plans.
 
-Methods mirror the paper's evaluated algorithms. ``backend="host"`` runs the
-faithful numpy executors; ``backend="pallas"`` runs the TPU kernels (interpret
-mode on CPU). Default parameters are the paper's best settings.
+Methods mirror the paper's evaluated algorithms, plus ``method="auto"`` —
+the self-tuning entry point (DESIGN.md §8): the operands are sliced into a
+2D tile grid and every tile runs the method an analytical cost model picks
+for that tile's work profile.  ``backend="host"`` runs the faithful numpy
+executors; ``backend="pallas"`` runs the TPU kernels (interpret mode on
+CPU).  Default parameters are the paper's best settings.
 
 ``spgemm`` is a thin wrapper over the plan/execute split (DESIGN.md §6): it
 builds — or fetches from a bounded LRU keyed on pattern fingerprints — a
-:class:`~repro.core.planner.SpgemmPlan` and executes it against the operand
-values.  Repeated-pattern workloads can also hold a plan explicitly::
+:class:`~repro.core.planner.SpgemmPlan` (or
+:class:`~repro.core.planner.TiledSpgemmPlan` for ``"auto"``) and executes
+it against the operand values.  Repeated-pattern workloads can also hold a
+plan explicitly::
 
     plan = plan_spgemm(a, b, "h-hash-256/256")
     c1 = plan.execute(a_vals_1, b_vals_1)   # numeric phase only
     c2 = spgemm(a2, b2, plan=plan)          # equivalent spelling
+
+A held plan carries its own method/backend/parameters; passing conflicting
+``method=``/``backend=``/``t=``/``b_min=``/``b_max=`` alongside ``plan=``
+raises instead of being silently ignored.
 """
 
 from __future__ import annotations
 
 from collections import OrderedDict
 
+from repro.core.cost import AUTO_CANDIDATES
 from repro.core.planner import (
     ALGORITHMS,
     SpgemmPlan,
+    TiledSpgemmPlan,
+    normalize_tile_spec,
     pattern_fingerprint,
     plan_spgemm,
+    plan_spgemm_tiled,
     resolve_params,
 )
 from repro.sparse.format import BatchedCSC, CSC
 
-# bounded LRU of SpgemmPlan keyed by (a_fp, b_fp, method, backend, params)
+DEFAULT_METHOD = "h-hash-256/256"
+
+# bounded LRU of plans keyed by (a_fp, b_fp, method, backend, params);
+# resize at runtime with plan_cache_resize()
 PLAN_CACHE_SIZE = 64
-_PLAN_CACHE: "OrderedDict[tuple, SpgemmPlan]" = OrderedDict()
+_PLAN_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
 _CACHE_STATS = {"hits": 0, "misses": 0}
 
 
@@ -41,78 +57,195 @@ def plan_cache_clear() -> None:
 
 
 def plan_cache_info() -> dict:
-    """Current cache occupancy and hit/miss counters."""
+    """Current cache occupancy, hit/miss counters, and hit rate."""
+    lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
     return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
-                max_size=PLAN_CACHE_SIZE)
+                max_size=PLAN_CACHE_SIZE,
+                hit_rate=_CACHE_STATS["hits"] / lookups if lookups else 0.0)
 
 
-def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
-                 params: dict) -> SpgemmPlan:
-    key = (pattern_fingerprint(a), pattern_fingerprint(b), method, backend,
-           tuple(sorted(params.items())))
+def plan_cache_resize(n: int) -> dict:
+    """Set the plan LRU capacity (evicting least-recently-used overflow).
+
+    The supported way to bound plan memory — callers no longer need to
+    mutate the ``PLAN_CACHE_SIZE`` module constant.  ``n == 0`` disables
+    caching (every insert is immediately evicted).  Returns
+    :func:`plan_cache_info` after the resize.
+    """
+    global PLAN_CACHE_SIZE
+    n = int(n)
+    if n < 0:
+        raise ValueError(f"cache size must be >= 0, got {n}")
+    PLAN_CACHE_SIZE = n
+    while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
+        _PLAN_CACHE.popitem(last=False)
+    return plan_cache_info()
+
+
+def _cache_get(key):
     plan = _PLAN_CACHE.get(key)
     if plan is not None:
         _PLAN_CACHE.move_to_end(key)
         _CACHE_STATS["hits"] += 1
         return plan
     _CACHE_STATS["misses"] += 1
-    plan = plan_spgemm(a, b, method, backend=backend,
-                       t=params.get("t"), b_min=params.get("b_min"),
-                       b_max=params.get("b_max"))
+    return None
+
+
+def _cache_put(key, plan):
     _PLAN_CACHE[key] = plan
     while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
         _PLAN_CACHE.popitem(last=False)
+
+
+def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
+                 params: dict) -> SpgemmPlan:
+    key = (pattern_fingerprint(a), pattern_fingerprint(b), method, backend,
+           tuple(sorted(params.items())))
+    plan = _cache_get(key)
+    if plan is None:
+        plan = plan_spgemm(a, b, method, backend=backend,
+                           t=params.get("t"), b_min=params.get("b_min"),
+                           b_max=params.get("b_max"))
+        _cache_put(key, plan)
     return plan
+
+
+def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,
+                       candidates) -> TiledSpgemmPlan:
+    spec = normalize_tile_spec(tile)
+    # resolve the default candidate set before keying, so an explicit
+    # candidates= equal to the backend default hits the same entry
+    cands = AUTO_CANDIDATES[backend] if candidates is None \
+        else tuple(candidates)
+    key = (pattern_fingerprint(a), pattern_fingerprint(b), "auto", backend,
+           spec, cands)
+    plan = _cache_get(key)
+    if plan is None:
+        plan = plan_spgemm_tiled(a, b, backend=backend, tile=tile,
+                                 candidates=cands)
+        _cache_put(key, plan)
+    return plan
+
+
+def _check_plan_overrides(plan, method, backend, t, b_min, b_max,
+                          tile=None, candidates=None) -> None:
+    """Reject ``spgemm(plan=...)`` calls whose explicit arguments conflict
+    with what the held plan was built with (held-plan misuse is loud)."""
+    own = dict(plan.params)
+    conflicts = []
+    if method is not None and method != plan.method:
+        conflicts.append(f"method={method!r} (plan has {plan.method!r})")
+    if backend is not None and backend != plan.backend:
+        conflicts.append(f"backend={backend!r} (plan has {plan.backend!r})")
+    for name, given in (("t", t), ("b_min", b_min), ("b_max", b_max)):
+        if given is None:
+            continue
+        if name not in own or own[name] != given:
+            have = own.get(name, "<unset>")
+            conflicts.append(f"{name}={given!r} (plan has {have})")
+    if tile is not None:
+        spec = normalize_tile_spec(tile)
+        if own.get("tile") != spec:
+            conflicts.append(
+                f"tile={tile!r} (plan has {own.get('tile', '<unset>')})")
+    if candidates is not None and own.get("candidates") != tuple(candidates):
+        conflicts.append(
+            f"candidates={tuple(candidates)!r} "
+            f"(plan has {own.get('candidates', '<unset>')})")
+    if conflicts:
+        raise ValueError(
+            "arguments conflict with the held plan (a plan carries its own "
+            "method/backend/parameters): " + "; ".join(conflicts))
+
+
+def _resolve_method_backend(method, backend):
+    method = DEFAULT_METHOD if method is None else method
+    backend = "host" if backend is None else backend
+    if method != "auto" and method not in ALGORITHMS:
+        raise ValueError(
+            f"unknown method {method!r}; one of {list(ALGORITHMS)} or 'auto'")
+    if backend not in ("host", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return method, backend
+
+
+def _check_auto_only(method, t, b_min, b_max, tile, candidates):
+    """Arguments specific to one mode must not be passed with the other."""
+    if method != "auto" and (tile is not None or candidates is not None):
+        raise ValueError(
+            "tile=/candidates= only apply to method='auto' "
+            f"(got method={method!r})")
+    if method == "auto" and (t is not None or b_min is not None
+                             or b_max is not None):
+        raise ValueError(
+            "t/b_min/b_max do not apply to method='auto' (per-tile methods "
+            "use their own defaults; restrict candidates= instead)")
 
 
 def spgemm(
     a: CSC,
     b: CSC,
-    method: str = "h-hash-256/256",
+    method: str | None = None,
     *,
-    backend: str = "host",
+    backend: str | None = None,
     t: float | None = None,
     b_min: int | None = None,
     b_max: int | None = None,
-    plan: SpgemmPlan | None = None,
+    tile=None,
+    candidates: tuple | None = None,
+    plan=None,
     cache: bool = True,
     validate: str | None = None,
 ) -> CSC:
-    """Compute C = A @ B with one of the paper's algorithms.
+    """Compute C = A @ B with one of the paper's algorithms, or ``"auto"``.
 
-    Overriding t/b_min/b_max customizes the named method's defaults.  With
-    ``plan`` the symbolic phase is skipped outright (method/backend arguments
-    are ignored — the plan carries its own); with ``cache=False`` the plan is
+    The default method is ``"h-hash-256/256"`` (the paper's best overall).
+    Overriding t/b_min/b_max customizes the named method's defaults.
+    ``method="auto"`` builds a :class:`~repro.core.planner.TiledSpgemmPlan`:
+    the operands are tiled (grid auto-sized from nnz, or set with ``tile=``)
+    and each tile runs the candidate method the cost model predicts cheapest
+    (DESIGN.md §8).  With ``plan`` the symbolic phase is skipped outright —
+    the plan carries its own method/backend/parameters, and explicitly
+    passing any that conflict raises.  With ``cache=False`` the plan is
     rebuilt from scratch, bypassing the LRU.  ``validate="fingerprint"``
-    re-hashes the operand structure against the plan (O(nnz)) instead of the
-    default O(1) shape/nnz check — useful when reusing a held plan against
-    operands of uncertain provenance.
+    re-hashes the operand structure against the plan (O(nnz)) instead of
+    the default O(1) shape/nnz check.
     """
     if plan is not None:
+        _check_plan_overrides(plan, method, backend, t, b_min, b_max,
+                              tile, candidates)
         return plan.execute(a, b, validate=validate)
-    if method not in ALGORITHMS:
-        raise ValueError(f"unknown method {method!r}; one of {list(ALGORITHMS)}")
-    if backend not in ("host", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
+    method, backend = _resolve_method_backend(method, backend)
+    _check_auto_only(method, t, b_min, b_max, tile, candidates)
+    if method == "auto":
+        if cache:
+            p = _cached_tiled_plan(a, b, backend, tile, candidates)
+        else:
+            p = plan_spgemm_tiled(a, b, backend=backend, tile=tile,
+                                  candidates=candidates, cache=False)
+        return p.execute(a, b, validate=validate)
     params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
     if cache:
         p = _cached_plan(a, b, method, backend, params)
     else:
         p = plan_spgemm(a, b, method, backend=backend, t=params.get("t"),
                         b_min=params.get("b_min"), b_max=params.get("b_max"))
-    return p.execute(a, b)
+    return p.execute(a, b, validate=validate)
 
 
 def spgemm_batched(
     a: BatchedCSC,
     b: BatchedCSC,
-    method: str = "h-hash-256/256",
+    method: str | None = None,
     *,
-    backend: str = "host",
+    backend: str | None = None,
     t: float | None = None,
     b_min: int | None = None,
     b_max: int | None = None,
-    plan: SpgemmPlan | None = None,
+    tile=None,
+    candidates: tuple | None = None,
+    plan=None,
     cache: bool = True,
     validate: str | None = None,
 ) -> list:
@@ -122,13 +255,17 @@ def spgemm_batched(
     sparsity pattern, values ``[B, nnz]``).  The symbolic plan is built — or
     fetched from the same LRU as ``spgemm`` — once for the shared pattern,
     then all B value sets run through one set of kernel launches
-    (``plan.execute_batched``, DESIGN.md §7).  Returns a list of B CSC
-    results, bit-identical to calling ``spgemm`` per element.
+    (``plan.execute_batched``, DESIGN.md §7).  ``method="auto"`` rides the
+    tiled plan's batched path (§8).  Returns a list of B CSC results,
+    bit-identical to calling ``spgemm`` per element.
 
-    With ``plan`` the symbolic phase is skipped and ``a``/``b`` may also be
-    raw ``[B, nnz]`` value stacks aligned with the planned patterns.
+    With ``plan`` the symbolic phase is skipped (conflicting explicit
+    arguments raise, as in :func:`spgemm`) and ``a``/``b`` may also be raw
+    ``[B, nnz]`` value stacks aligned with the planned patterns.
     """
     if plan is not None:
+        _check_plan_overrides(plan, method, backend, t, b_min, b_max,
+                              tile, candidates)
         return plan.execute_batched(a, b, validate=validate)
     if not isinstance(a, BatchedCSC) or not isinstance(b, BatchedCSC):
         raise TypeError(
@@ -138,12 +275,17 @@ def spgemm_batched(
         raise ValueError(f"batch mismatch: {a.batch} vs {b.batch}")
     if a.batch < 1:
         raise ValueError("empty batch")
-    if method not in ALGORITHMS:
-        raise ValueError(f"unknown method {method!r}; one of {list(ALGORITHMS)}")
-    if backend not in ("host", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
-    params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
+    method, backend = _resolve_method_backend(method, backend)
+    _check_auto_only(method, t, b_min, b_max, tile, candidates)
     a0, b0 = a.element(0), b.element(0)
+    if method == "auto":
+        if cache:
+            p = _cached_tiled_plan(a0, b0, backend, tile, candidates)
+        else:
+            p = plan_spgemm_tiled(a0, b0, backend=backend, tile=tile,
+                                  candidates=candidates, cache=False)
+        return p.execute_batched(a, b, validate=validate)
+    params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
     if cache:
         p = _cached_plan(a0, b0, method, backend, params)
     else:

@@ -1,0 +1,199 @@
+"""Analytical per-tile cost model for ``method="auto"`` (DESIGN.md §8).
+
+Each tile of a :class:`~repro.core.planner.TiledSpgemmPlan` gets the method
+the model predicts cheapest for that tile's work profile — the paper's
+per-column hybrid switching generalized to per-tile method selection, in
+the spirit of Nagasaka et al.'s per-region accumulator choice.
+
+Two separate models, selected by backend:
+
+* **host** — predicts wall time (seconds) of the numpy executors.  Their
+  cost structure is dominated by Python-loop overhead versus vectorized
+  throughput: SPA pays a per-column and per-B-entry loop toll but touches
+  each product once; expand is fully vectorized but sorts the whole product
+  stream; the lock-step executors (SPARS/HASH) pay a Python iteration per
+  lock-step round.  Constants are calibrated by
+  ``benchmarks/tiled.py --calibrate`` (values below are from that script on
+  the CI container class; they only need to be right *relative* to each
+  other, and the regimes they separate differ by orders of magnitude).
+* **pallas** — predicts relative kernel work from the DESIGN.md §2 cost
+  dictionary: SPA streams every B entry against an ``[m, L]`` tile, SPARS
+  pays the block-max trip count against the same tile, HASH pays it against
+  an ``[H, L]`` table with ``H`` sized from the block's worst column — so
+  sparse tiles favour HASH (``H << m``) and dense tiles favour SPA, exactly
+  the paper's Figure 3/4 crossover.
+
+The model consumes only :class:`~repro.sparse.stats.TileStats` (pattern
+statistics, O(nnz)); it never looks at values.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.sparse.stats import TileStats
+
+# default per-backend candidate sets for method="auto".  Host: the two
+# executors with complementary regimes (SPA: loop-bound, cheap per product;
+# expand: vectorized, pays the sort on big product streams).  Pallas: the
+# paper's families — dense-tile SPA vs small-table HASH, with SPARS between.
+AUTO_CANDIDATES = {
+    "host": ("spa", "expand"),
+    "pallas": ("spa", "spars-40/40", "hash-256/256"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CostConstants:
+    """Calibrated coefficients (host entries in seconds; pallas relative).
+
+    Host values measured by ``benchmarks/tiled.py --calibrate``; see module
+    docstring.
+    """
+
+    # host spa_numpy: per-column loop + per-B-entry vector op + per product
+    spa_col: float = 3.5e-6
+    spa_entry: float = 5.6e-6
+    spa_flop: float = 8.0e-9
+    # host spgemm_expand: vectorized pipeline + per-product stream/sort work
+    expand_base: float = 1.0e-4
+    expand_prod: float = 7.0e-8
+    expand_sort: float = 8.0e-9       # per product per log2(products)
+    # host esc_numpy: expand + explicit LSD radix rounds
+    esc_base: float = 2.0e-4
+    esc_round: float = 1.2e-7         # per product per radix round
+    # host lock-step executors: per Python round + per product probe work
+    lockstep_iter: float = 3.0e-5
+    hash_probe: float = 3.0e-6
+    # pallas relative-work coefficients (unitless; compared per backend)
+    p_spa_entry: float = 1.0          # x m per streamed B entry
+    p_spa_col: float = 1.0            # x m per output column (tile init)
+    p_lock_iter: float = 1.0          # x accumulator height per round
+    p_hash_col: float = 1.0           # x H per column (compaction)
+
+
+DEFAULT_CONSTANTS = CostConstants()
+
+
+def _family(method: str) -> str:
+    if method in ("spa", "expand", "esc"):
+        return method
+    if method.startswith("h-"):
+        return "hybrid"
+    if method.startswith("spars"):
+        return "spars"
+    if method.startswith("hash"):
+        return "hash"
+    raise ValueError(f"cost model does not know method {method!r}")
+
+
+def _params(method: str) -> dict:
+    from repro.core.planner import resolve_params
+
+    return resolve_params(method)
+
+
+def _lockstep_rounds(steps: np.ndarray, b: int) -> int:
+    """Total lock-step iterations: sum of per-block max trip counts.
+
+    Columns are processed sorted by load in blocks of ~``b`` lanes and every
+    round runs until the block's slowest lane finishes, so the bound is the
+    sum of block maxima over the descending-sorted step counts.
+    """
+    work = np.sort(steps[steps > 0])[::-1]
+    if not len(work):
+        return 0
+    return int(work[::max(int(b), 1)].sum())
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(math.ceil(math.log2(max(x, 2)))), 1)
+
+
+def _host_cost(stats: TileStats, method: str, c: CostConstants) -> float:
+    fam = _family(method)
+    flops = stats.flops
+    if fam == "spa":
+        return (c.spa_col * stats.n + c.spa_entry * stats.nnz_b
+                + c.spa_flop * flops)
+    if fam == "expand":
+        return c.expand_base + flops * (
+            c.expand_prod + c.expand_sort * math.log2(max(flops, 2)))
+    if fam == "esc":
+        rounds = (math.ceil(math.log2(max(stats.m, 2)) / 5)
+                  + math.ceil(math.log2(max(stats.n, 2)) / 5))
+        return c.esc_base + c.esc_round * flops * rounds
+    params = _params(method)
+    t = params.get("t", np.inf)
+    head = stats.ops >= t
+    tail_steps = stats.steps[~head]
+    cost = (c.spa_col * int(head.sum())
+            + c.spa_flop * int(stats.ops[head].sum())
+            + c.spa_entry * int(head.sum()) * stats.nnz_b
+            / max(stats.n, 1))
+    rounds = _lockstep_rounds(tail_steps, params.get("b_max", 256))
+    cost += c.lockstep_iter * rounds
+    if fam == "hash" or params.get("accumulator") == "hash":
+        cost += c.hash_probe * int(stats.ops[~head].sum())
+    return cost
+
+
+def _pallas_cost(stats: TileStats, method: str, c: CostConstants) -> float:
+    fam = _family(method)
+    m = max(stats.m, 1)
+    if fam in ("expand", "esc"):
+        raise ValueError(f"method {method!r} has no Pallas kernel family")
+    if fam == "spa":
+        return c.p_spa_entry * m * stats.nnz_b + c.p_spa_col * m * stats.n
+    params = _params(method)
+    t = params.get("t", np.inf)
+    head = stats.ops >= t
+    cost = (c.p_spa_entry * m * stats.nnz_b * int(head.sum())
+            / max(stats.n, 1) + c.p_spa_col * m * int(head.sum()))
+    tail_steps = stats.steps[~head]
+    rounds = _lockstep_rounds(tail_steps, params.get("b_max", 256))
+    acc = params.get("accumulator",
+                     "hash" if fam == "hash" else "spa")
+    if fam == "spars" or acc == "spa":
+        cost += c.p_lock_iter * m * rounds
+    else:
+        tail_ops = stats.ops[~head]
+        h = _next_pow2(int(tail_ops.max()) if len(tail_ops) else 2)
+        cost += (c.p_lock_iter * h * rounds
+                 + c.p_hash_col * h * int((~head).sum()))
+    return cost
+
+
+def estimate_cost(stats: TileStats, method: str, backend: str = "host",
+                  constants: CostConstants | None = None) -> float:
+    """Predicted cost of running ``method`` on one tile (lower is better).
+
+    Host estimates are in seconds; Pallas estimates are relative work units.
+    Only compare estimates within one backend.
+    """
+    c = constants or DEFAULT_CONSTANTS
+    if backend == "host":
+        return _host_cost(stats, method, c)
+    if backend == "pallas":
+        return _pallas_cost(stats, method, c)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def choose_method(stats: TileStats, backend: str = "host",
+                  candidates: tuple | None = None,
+                  constants: CostConstants | None = None) -> str:
+    """Cheapest candidate method for this tile (deterministic: first wins
+    ties in candidate order)."""
+    cands = AUTO_CANDIDATES[backend] if candidates is None \
+        else tuple(candidates)
+    if not cands:
+        raise ValueError("empty candidate set")
+    best, best_cost = cands[0], None
+    for m in cands:
+        cost = estimate_cost(stats, m, backend, constants)
+        if best_cost is None or cost < best_cost:
+            best, best_cost = m, cost
+    return best

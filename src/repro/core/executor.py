@@ -37,6 +37,7 @@ from repro.sparse.format import (
     padded_values,
     padded_values_batched,
 )
+from repro.sparse.partition import csc_empty, csc_hstack, merge_csc_partials
 
 # filled below: host methods whose batched path is vectorized over the value
 # axis (their accumulation structure is pattern-only); everything else loops
@@ -102,6 +103,133 @@ def execute_batched(plan: SpgemmPlan, a_values, b_values, *,
         return out
     return _execute_pallas_batched(plan, av, bv, interpret=interpret,
                                    stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# tiled execution: per-tile plans + the merge/stitch reduction (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _tiled_dtype(plan, av, bv):
+    return np.float32 if plan.backend == "pallas" \
+        else np.result_type(av.dtype, bv.dtype)
+
+
+def _tile_values(plan, tile, av, bv):
+    """Slice the parent value arrays down to one tile (pattern-static)."""
+    lo, hi = tile.a_vals
+    return av[..., lo:hi], bv[..., tile.b_vals]
+
+
+def _merge_and_stitch(plan, per_block, dtype) -> CSC:
+    """Reduce per-column-block partial lists into the final CSC.
+
+    ``per_block[ni]`` holds the row-block partials of column block ``ni``
+    in k-ascending order.  Each block merges (single partials pass through
+    bit-identically), then the blocks stitch left-to-right.
+    """
+    m = plan.shape[0]
+    blocks = []
+    for ni, (j0, j1) in enumerate(zip(plan.n_bounds[:-1],
+                                      plan.n_bounds[1:])):
+        shape = (m, int(j1 - j0))
+        parts = per_block[ni]
+        if not parts:
+            blocks.append(csc_empty(shape, dtype))
+        else:
+            blocks.append(merge_csc_partials(parts, shape, dtype=dtype))
+    if not blocks:
+        return csc_empty((m, 0), dtype)
+    return csc_hstack(blocks, m)
+
+
+def _record_tile_stats(plan, stats, child_stats):
+    if stats is None:
+        return
+    stats["grid"] = plan.grid
+    stats["tiles"] = [
+        {"k": t.k, "n": t.n, "method": t.method} for t in plan.tiles]
+    stats["methods"] = sorted({t.method for t in plan.tiles})
+    stats["merged_blocks"] = len(
+        {t.n for t in plan.tiles
+         if sum(u.n == t.n for u in plan.tiles) > 1})
+    stats["result_shape"] = plan.shape
+    if child_stats:
+        stats["n_launches"] = sum(
+            s.get("n_launches", 0) for s in child_stats)
+        stats["peak_tile_elems"] = max(
+            (s.get("peak_tile_elems", 0) for s in child_stats), default=0)
+
+
+def execute_tiled(plan, a_values, b_values, *, interpret: bool = True,
+                  stats: dict | None = None,
+                  validate: str | None = None) -> CSC:
+    """Numeric phase of a :class:`~repro.core.planner.TiledSpgemmPlan`.
+
+    Runs every tile's child plan on the tile's value slices, accumulates
+    row-block partials per column block (k-ascending; a single row block is
+    a bit-identical passthrough), and stitches the column blocks.  ``stats``
+    records the grid, the per-tile method choices, and — on the Pallas
+    backend — the aggregated launch count and peak transient tile size.
+    """
+    plan.a.check_compatible(a_values, validate)
+    plan.b.check_compatible(b_values, validate)
+    av = _values(a_values)[: int(plan.a.col_ptr[-1])]
+    bv = _values(b_values)[: int(plan.b.col_ptr[-1])]
+    dtype = _tiled_dtype(plan, av, bv)
+    per_block = {ni: [] for ni in range(plan.grid[1])}
+    child_stats = []
+    for tile in plan.tiles:
+        ta, tb = _tile_values(plan, tile, av, bv)
+        cs = {} if (stats is not None
+                    and plan.backend == "pallas") else None
+        per_block[tile.n].append(
+            tile.plan.execute(ta, tb, interpret=interpret, stats=cs))
+        if cs is not None:
+            child_stats.append(cs)
+    _record_tile_stats(plan, stats, child_stats)
+    return _merge_and_stitch(plan, per_block, dtype)
+
+
+def execute_tiled_batched(plan, a_values, b_values, *,
+                          interpret: bool = True,
+                          stats: dict | None = None,
+                          validate: str | None = None) -> list:
+    """Batched tiled execution: B value sets through one plan traversal.
+
+    Each tile's child plan executes batched (one launch set per tile,
+    independent of B on the Pallas backend); the merge/stitch reduction
+    then runs per batch element, bit-identical to looping
+    :func:`execute_tiled`.
+    """
+    av = plan.a.batched_values(a_values, validate)
+    bv = plan.b.batched_values(b_values, validate)
+    if av.shape[0] != bv.shape[0]:
+        raise ValueError(
+            f"batch mismatch: A has {av.shape[0]} value sets, "
+            f"B has {bv.shape[0]}")
+    batch = av.shape[0]
+    if batch == 0:
+        raise ValueError("empty batch")
+    dtype = _tiled_dtype(plan, av, bv)
+    per_block = [{ni: [] for ni in range(plan.grid[1])}
+                 for _ in range(batch)]
+    child_stats = []
+    for tile in plan.tiles:
+        ta, tb = _tile_values(plan, tile, av, bv)
+        cs = {} if (stats is not None
+                    and plan.backend == "pallas") else None
+        outs = tile.plan.execute_batched(ta, tb, interpret=interpret,
+                                         stats=cs)
+        for bi, c in enumerate(outs):
+            per_block[bi][tile.n].append(c)
+        if cs is not None:
+            child_stats.append(cs)
+    _record_tile_stats(plan, stats, child_stats)
+    if stats is not None:
+        stats["batch"] = batch
+    return [_merge_and_stitch(plan, per_block[bi], dtype)
+            for bi in range(batch)]
 
 
 def _execute_host(plan: SpgemmPlan, a_values, b_values) -> CSC:

@@ -27,8 +27,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analysis import Preprocess, preprocess
+from repro.core.cost import AUTO_CANDIDATES, CostConstants, choose_method
 from repro.sparse.format import BatchedCSC, CSC, _np, csc_pad_gather
-from repro.sparse.stats import steps_per_column
+from repro.sparse.partition import (
+    auto_tile_grid,
+    csc_col_slice,
+    csc_row_slice,
+    nnz_balanced_col_bounds,
+    width_col_bounds,
+)
+from repro.sparse.stats import steps_per_column, tile_stats
 
 # method -> base kwargs; the paper's Section 5.3 configurations
 ALGORITHMS = {
@@ -350,6 +358,208 @@ def plan_spgemm(
     pre, layout = _plan_pallas(a, b, method, params, block_cols, tile_cols)
     return SpgemmPlan(method, "pallas", _freeze(params), a_pat, b_pat,
                       pre, layout)
+
+
+# ---------------------------------------------------------------------------
+# Tiled plans: a 2D grid of per-tile SpgemmPlans (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """One non-empty tile product ``A[:, k] @ B[k, n]`` of a tiled plan.
+
+    ``a_vals``/``b_vals`` are the pattern-static value-slicing metadata: the
+    A tile's values are the contiguous range ``[a_vals[0], a_vals[1])`` of
+    the parent A value array, the B tile's values are ``b_parent[b_vals]``
+    (a gather — row slicing is not contiguous in CSC).  ``plan`` is an
+    ordinary per-tile :class:`SpgemmPlan`, shared through the plan LRU with
+    any other tile of identical pattern.
+    """
+
+    k: int                       # row-block index (A column block)
+    n: int                       # column-block index (B column block)
+    a_vals: Tuple[int, int]
+    b_vals: np.ndarray
+    plan: SpgemmPlan
+
+    @property
+    def method(self) -> str:
+        return self.plan.method
+
+
+@dataclasses.dataclass(frozen=True)
+class TiledSpgemmPlan:
+    """Symbolic plan for ``C = A @ B`` as a 2D grid of tile products.
+
+    Built by :func:`plan_spgemm_tiled` (the ``method="auto"`` path of
+    ``core.api.spgemm``): A is sliced into column blocks at ``k_bounds``, B
+    into matching row blocks crossed with column blocks at ``n_bounds``,
+    and every structurally non-empty tile pair gets its own child
+    :class:`SpgemmPlan` whose method the cost model picked for that tile's
+    work profile.  Execution (``core.executor.execute_tiled``) runs the
+    children and merges: per column block, partial products accumulate over
+    row blocks in k order; the blocks then stitch left-to-right into the
+    final CSC.  A plan with a single row block is bit-identical per column
+    to the untiled method (DESIGN.md §8).
+    """
+
+    backend: str
+    a: Pattern
+    b: Pattern
+    k_bounds: np.ndarray         # [K+1] over A's columns / B's rows
+    n_bounds: np.ndarray         # [N+1] over B's columns
+    tiles: Tuple[TilePlan, ...]  # structurally non-empty tiles, n-major
+    params: tuple                # frozen ("candidates", ...), ("tile", ...)
+
+    method = "auto"
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.a.shape[0], self.b.shape[1])
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (len(self.k_bounds) - 1, len(self.n_bounds) - 1)
+
+    @property
+    def methods(self) -> dict:
+        """{(k, n): chosen method} for every non-empty tile."""
+        return {(t.k, t.n): t.method for t in self.tiles}
+
+    @property
+    def cache_key(self) -> tuple:
+        # mirrors core.api._cached_tiled_plan's LRU key exactly
+        own = dict(self.params)
+        return (self.a.fingerprint, self.b.fingerprint, "auto",
+                self.backend, own["tile"], own["candidates"])
+
+    def execute(self, a_values, b_values, *, interpret: bool = True,
+                stats: dict | None = None,
+                validate: str | None = None) -> CSC:
+        """Numeric phase: run every tile plan, merge row blocks, stitch."""
+        from repro.core.executor import execute_tiled
+
+        return execute_tiled(self, a_values, b_values, interpret=interpret,
+                             stats=stats, validate=validate)
+
+    def execute_batched(self, a_values, b_values, *, interpret: bool = True,
+                        stats: dict | None = None,
+                        validate: str | None = None) -> list:
+        """Batched numeric phase over ``[B, nnz]`` value stacks."""
+        from repro.core.executor import execute_tiled_batched
+
+        return execute_tiled_batched(self, a_values, b_values,
+                                     interpret=interpret, stats=stats,
+                                     validate=validate)
+
+
+def normalize_tile_spec(tile) -> tuple:
+    """Canonical ``(k_width, n_width)`` form of the ``tile=`` argument.
+
+    ``None`` → both axes auto-sized from nnz; an int → that column width on
+    the n axis (k auto); a 2-tuple gives per-axis widths, ``None`` meaning
+    auto for that axis.
+    """
+    if tile is None:
+        return (None, None)
+    if isinstance(tile, (int, np.integer)):
+        spec = (None, int(tile))
+    else:
+        spec = tuple(tile)
+    if len(spec) != 2:
+        raise ValueError(
+            f"tile must be None, an int, or a (k_width, n_width) pair; "
+            f"got {tile!r}")
+    out = []
+    for w in spec:
+        if w is None:
+            out.append(None)
+        elif isinstance(w, (int, np.integer)) and int(w) >= 1:
+            out.append(int(w))
+        else:
+            raise ValueError(f"tile widths must be ints >= 1 or None, "
+                             f"got {w!r}")
+    return tuple(out)
+
+
+def plan_spgemm_tiled(
+    a: CSC,
+    b: CSC,
+    *,
+    backend: str = "host",
+    tile=None,
+    candidates: tuple | None = None,
+    cache: bool = True,
+    constants: CostConstants | None = None,
+) -> TiledSpgemmPlan:
+    """Build the tiled ``method="auto"`` plan for C = A @ B.
+
+    ``tile`` — see :func:`normalize_tile_spec`; auto axes use nnz-balanced
+    boundaries (:func:`~repro.sparse.partition.nnz_balanced_col_bounds`)
+    with block counts from :func:`~repro.sparse.partition.auto_tile_grid`.
+    ``candidates`` restricts the per-tile method choice (defaults to
+    ``cost.AUTO_CANDIDATES[backend]``); with a single candidate every tile
+    runs that method, which makes single-row-block grids bit-identical to
+    the untiled method.  ``cache=True`` funnels child plans through the
+    shared plan LRU, so tiles with identical patterns share one plan.
+    """
+    if a.n_cols != b.n_rows:
+        raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
+    if backend not in ("host", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    cands = AUTO_CANDIDATES[backend] if candidates is None \
+        else tuple(candidates)
+    if not cands:
+        raise ValueError("empty candidate set")
+    if backend == "pallas":
+        bad = [m for m in cands if m in HOST_ONLY]
+        if bad:
+            raise ValueError(
+                f"candidates {bad} have no Pallas kernel family (host-only)")
+
+    k_width, n_width = normalize_tile_spec(tile)
+    auto_k, auto_n = auto_tile_grid(a, b)
+    k_bounds = (width_col_bounds(a.n_cols, k_width) if k_width
+                else nnz_balanced_col_bounds(a, auto_k))
+    n_bounds = (width_col_bounds(b.n_cols, n_width) if n_width
+                else nnz_balanced_col_bounds(b, auto_n))
+
+    def _tile_plan(ta, tb, method):
+        if cache:
+            from repro.core.api import _cached_plan
+
+            return _cached_plan(ta, tb, method, backend,
+                                resolve_params(method))
+        return plan_spgemm(ta, tb, method, backend=backend)
+
+    # A column blocks depend only on k: slice them once, not once per n block
+    a_tiles = [csc_col_slice(a, int(k0), int(k1))
+               for k0, k1 in zip(k_bounds[:-1], k_bounds[1:])]
+    tiles: list[TilePlan] = []
+    for ni, (j0, j1) in enumerate(zip(n_bounds[:-1], n_bounds[1:])):
+        b_col, (b_lo, _) = csc_col_slice(b, int(j0), int(j1))
+        for ki, (k0, k1) in enumerate(zip(k_bounds[:-1], k_bounds[1:])):
+            a_tile, (a_lo, a_hi) = a_tiles[ki]
+            if a_tile.nnz == 0:
+                continue
+            b_tile, rel = csc_row_slice(b_col, int(k0), int(k1))
+            if b_tile.nnz == 0:
+                continue
+            stats = tile_stats(a_tile, b_tile)
+            if stats.flops == 0:
+                continue  # stored B entries only reference empty A columns
+            method = choose_method(stats, backend, cands, constants)
+            tiles.append(TilePlan(
+                k=ki, n=ni, a_vals=(a_lo, a_hi), b_vals=b_lo + rel,
+                plan=_tile_plan(a_tile, b_tile, method)))
+
+    params = (("candidates", cands),
+              ("tile", (k_width, n_width)))
+    return TiledSpgemmPlan(backend, Pattern.of(a), Pattern.of(b),
+                           np.asarray(k_bounds, np.int64),
+                           np.asarray(n_bounds, np.int64),
+                           tuple(tiles), params)
 
 
 # ---------------------------------------------------------------------------

@@ -114,23 +114,37 @@ def spgemm_pallas(
     b_min: int | None = None, b_max: int | None = None,
     accumulator: str | None = None, block_cols: int = 128,
     tile_cols: int | None = None, interpret: bool = True,
-    plan=None,
+    tile=None, plan=None,
 ) -> CSC:
     """C = A @ B on the Pallas backend (plan once, execute once).
 
     The lock-step kernels use fixed-width column blocks (= ``block_cols``), so
     the b_min/b_max of the named method select the *family*; the dense-tile
     width is the kernel block. Hybrids split at ``t`` exactly as the paper.
-    Pass a cached ``plan`` (from ``core.plan_spgemm``) to skip the symbolic
-    phase entirely.
+    ``method="auto"`` builds a tiled plan whose per-tile kernel families the
+    cost model picks (DESIGN.md §8; ``tile=`` sets the grid).  Pass a cached
+    ``plan`` (from ``core.plan_spgemm`` / ``core.plan_spgemm_tiled``) to
+    skip the symbolic phase entirely.
     """
     del accumulator  # family is selected by the method name
+    if tile is not None and (plan is not None or method != "auto"):
+        raise ValueError(
+            "tile= only applies to method='auto' without a held plan")
     if plan is None:
-        from repro.core.planner import plan_spgemm
+        if method == "auto":
+            if (t != 40.0 or b_min is not None or b_max is not None
+                    or block_cols != 128 or tile_cols is not None):
+                raise ValueError(
+                    "t/b_min/b_max/block_cols/tile_cols do not apply to "
+                    "method='auto' (per-tile methods use their own "
+                    "defaults)")
+            from repro.core.planner import plan_spgemm_tiled
 
-        plan = plan_spgemm(a, b, method, backend="pallas", t=t, b_min=b_min,
-                           b_max=b_max, block_cols=block_cols,
-                           tile_cols=tile_cols)
-    from repro.core.executor import execute
+            plan = plan_spgemm_tiled(a, b, backend="pallas", tile=tile)
+        else:
+            from repro.core.planner import plan_spgemm
 
-    return execute(plan, a, b, interpret=interpret)
+            plan = plan_spgemm(a, b, method, backend="pallas", t=t,
+                               b_min=b_min, b_max=b_max,
+                               block_cols=block_cols, tile_cols=tile_cols)
+    return plan.execute(a, b, interpret=interpret)

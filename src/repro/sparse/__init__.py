@@ -12,6 +12,7 @@ from repro.sparse.format import (
     BatchedCSC,
     BatchedCSCBuilder,
     CSCBuilder,
+    csc_bit_identical,
     csc_from_dense,
     csc_to_dense,
     csc_to_csr,
@@ -29,12 +30,24 @@ from repro.sparse.generate import (
     random_banded_csc,
     random_powerlaw_csc,
 )
+from repro.sparse.partition import (
+    auto_tile_grid,
+    csc_col_slice,
+    csc_empty,
+    csc_hstack,
+    csc_row_slice,
+    merge_csc_partials,
+    nnz_balanced_col_bounds,
+    width_col_bounds,
+)
 from repro.sparse.stats import (
     column_nnz,
     ops_per_column,
     steps_per_column,
     matrix_stats,
+    tile_stats,
     MatrixStats,
+    TileStats,
 )
 from repro.sparse.suitesparse import (
     SUITESPARSE_TABLE1,
@@ -48,6 +61,7 @@ __all__ = [
     "COO",
     "BatchedCSC",
     "BatchedCSCBuilder",
+    "csc_bit_identical",
     "csc_from_dense",
     "csc_to_dense",
     "csc_to_csr",
@@ -63,11 +77,21 @@ __all__ = [
     "random_density_csc",
     "random_banded_csc",
     "random_powerlaw_csc",
+    "auto_tile_grid",
+    "csc_col_slice",
+    "csc_empty",
+    "csc_hstack",
+    "csc_row_slice",
+    "merge_csc_partials",
+    "nnz_balanced_col_bounds",
+    "width_col_bounds",
     "column_nnz",
     "ops_per_column",
     "steps_per_column",
     "matrix_stats",
+    "tile_stats",
     "MatrixStats",
+    "TileStats",
     "SUITESPARSE_TABLE1",
     "MatrixSpec",
     "synthesize_suitesparse",

@@ -543,3 +543,19 @@ def csc_equal(a: CSC, b: CSC, rtol: float = 1e-6, atol: float = 1e-8) -> bool:
     if a.shape != b.shape:
         return False
     return np.allclose(csc_to_dense(a), csc_to_dense(b), rtol=rtol, atol=atol)
+
+
+def csc_bit_identical(a: CSC, b: CSC) -> bool:
+    """Exact structural + value equality (storage order included).
+
+    The strictest comparison level: plan reuse, batched-vs-looped, and
+    column-only tiled execution all promise results identical at this level
+    (DESIGN.md §6-§8); tests and benchmarks assert through this one helper.
+    """
+    return (
+        a.shape == b.shape
+        and np.array_equal(_np(a.col_ptr), _np(b.col_ptr))
+        and np.array_equal(_np(a.row_indices)[: a.nnz],
+                           _np(b.row_indices)[: b.nnz])
+        and np.array_equal(_np(a.values)[: a.nnz], _np(b.values)[: b.nnz])
+    )

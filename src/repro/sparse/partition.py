@@ -1,0 +1,242 @@
+"""2D tile partition and stitch primitives for tiled SpGEMM (DESIGN.md §8).
+
+The tiled multiply decomposes ``C = A @ B`` into a grid of outer-block
+products: A is sliced into column blocks ``A[:, k0:k1]``, B into matching
+row blocks crossed with column blocks ``B[k0:k1, j0:j1]``, so
+
+    C[:, j0:j1] = sum_k  A[:, k0:k1] @ B[k0:k1, j0:j1]
+
+Each tile product is an ordinary (smaller) SpGEMM handled by its own cached
+:class:`~repro.core.planner.SpgemmPlan`; this module provides the
+pattern-level plumbing around that: slicing CSC operands along either axis
+(returning the value-gather metadata a plan needs to re-slice *new* numeric
+values cheaply), summing the per-k partial products, and stitching column
+blocks back into one CSC.
+
+Everything here is host-side numpy and value-layout preserving: a column
+slice is a contiguous range of the parent's value storage, a row slice is a
+pattern-static gather.  ``merge_csc_partials`` accumulates partials in the
+given (k-ascending) order, so the only numeric deviation a tile grid can
+introduce versus an untiled run is floating-point re-association across row
+blocks — a grid with a single row block is bit-identical per column.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparse.format import CSC, _np
+
+# auto grid sizing (spgemm(method="auto", tile=None)): target nnz per B
+# column block / per A column block.  The n-axis target is small enough that
+# a mixed-density matrix splits into blocks the cost model can specialize;
+# the k-axis target is much larger because row splits cost a merge pass and
+# re-associate floating-point sums (see module docstring).
+DEFAULT_TILE_NNZ = 16_384
+DEFAULT_KSPLIT_NNZ = 262_144
+
+
+# ---------------------------------------------------------------------------
+# grid boundaries
+# ---------------------------------------------------------------------------
+
+
+def width_col_bounds(n_cols: int, width: int) -> np.ndarray:
+    """Even-width column-block boundaries: [0, w, 2w, ..., n_cols].
+
+    A width >= n_cols (or a degenerate 0-column axis) yields a single block.
+    """
+    if width < 1:
+        raise ValueError(f"tile width must be >= 1, got {width}")
+    if n_cols <= 0:
+        return np.asarray([0], np.int64)
+    return np.concatenate(
+        (np.arange(0, n_cols, width, dtype=np.int64), [n_cols]))
+
+
+def nnz_balanced_col_bounds(m: CSC, n_blocks: int) -> np.ndarray:
+    """Column-block boundaries that roughly equalize nnz per block.
+
+    Computed from the cumulative column nnz (``col_ptr``) by placing cuts at
+    the nnz quantiles; duplicate cuts collapse, so the result may have fewer
+    than ``n_blocks`` blocks (always at least one for a non-empty axis).
+    """
+    n = m.n_cols
+    if n <= 0:
+        return np.asarray([0], np.int64)
+    n_blocks = max(1, min(int(n_blocks), n))
+    cp = _np(m.col_ptr).astype(np.int64)
+    targets = np.linspace(0, cp[-1], n_blocks + 1)[1:-1]
+    cuts = np.clip(np.searchsorted(cp, targets, side="left"), 1, n - 1) \
+        if n > 1 else np.zeros(0, np.int64)
+    return np.unique(np.concatenate(([0], cuts, [n]))).astype(np.int64)
+
+
+def auto_tile_grid(a: CSC, b: CSC, *, n_target: int = DEFAULT_TILE_NNZ,
+                   k_target: int = DEFAULT_KSPLIT_NNZ) -> tuple:
+    """(k_blocks, n_blocks) sized from operand nnz (DESIGN.md §8).
+
+    Small operands get a 1x1 grid (tiling then degenerates to the untiled
+    path, bit for bit); the n axis splits once B carries more than
+    ``n_target`` stored values, the k axis only for much larger A.
+    """
+    k_blocks = max(1, -(-a.nnz // k_target)) if a.n_cols else 1
+    n_blocks = max(1, -(-b.nnz // n_target)) if b.n_cols else 1
+    return min(k_blocks, max(a.n_cols, 1)), min(n_blocks, max(b.n_cols, 1))
+
+
+# ---------------------------------------------------------------------------
+# slicing (pattern + value-gather metadata)
+# ---------------------------------------------------------------------------
+
+
+def csc_col_slice(m: CSC, j0: int, j1: int):
+    """Columns [j0, j1) as a CSC, plus the (lo, hi) value range it occupies.
+
+    Column slicing is free in CSC: the slice's values are the contiguous
+    range ``[lo, hi)`` of the parent's value storage, so a cached tile plan
+    can bind fresh numeric values with a single array slice.
+    """
+    if not (0 <= j0 <= j1 <= m.n_cols):
+        raise ValueError(f"column slice [{j0}, {j1}) out of range "
+                         f"for {m.n_cols} columns")
+    cp = _np(m.col_ptr).astype(np.int64)
+    lo, hi = int(cp[j0]), int(cp[j1])
+    out = CSC(
+        _np(m.values)[lo:hi],
+        _np(m.row_indices)[lo:hi],
+        (cp[j0:j1 + 1] - lo).astype(np.int32),
+        (m.n_rows, j1 - j0),
+    )
+    return out, (lo, hi)
+
+
+def csc_row_slice(m: CSC, i0: int, i1: int):
+    """Rows [i0, i1) as a CSC of shape (i1-i0, n_cols), plus the gather.
+
+    The second return value is the index array of the kept entries in the
+    parent's value storage — pattern-only, so it re-slices any value set
+    with the parent's sparsity pattern (``new_vals[idx]``).
+    """
+    if not (0 <= i0 <= i1 <= m.n_rows):
+        raise ValueError(f"row slice [{i0}, {i1}) out of range "
+                         f"for {m.n_rows} rows")
+    cp = _np(m.col_ptr).astype(np.int64)
+    nnz = int(cp[-1])
+    rows = _np(m.row_indices)[:nnz]
+    keep = (rows >= i0) & (rows < i1)
+    idx = np.nonzero(keep)[0]
+    col_of = np.repeat(np.arange(m.n_cols, dtype=np.int64), np.diff(cp))
+    counts = np.bincount(col_of[idx], minlength=m.n_cols)
+    col_ptr = np.zeros(m.n_cols + 1, np.int32)
+    np.cumsum(counts, out=col_ptr[1:])
+    out = CSC(
+        _np(m.values)[:nnz][idx],
+        (rows[idx] - i0).astype(np.int32),
+        col_ptr,
+        (i1 - i0, m.n_cols),
+    )
+    return out, idx
+
+
+# ---------------------------------------------------------------------------
+# stitch / merge
+# ---------------------------------------------------------------------------
+
+
+def csc_empty(shape, dtype=np.float64) -> CSC:
+    """All-zero CSC of the given shape."""
+    return CSC(np.zeros(0, dtype), np.zeros(0, np.int32),
+               np.zeros(shape[1] + 1, np.int32), tuple(shape))
+
+
+def csc_hstack(parts, n_rows: int) -> CSC:
+    """Concatenate column blocks left-to-right into one CSC.
+
+    Inverse of slicing with :func:`csc_col_slice` along a boundary list:
+    stitching the slices back reproduces the parent bit for bit (values and
+    per-column row order are passed through untouched).
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("need at least one column block")
+    if any(p.n_rows != n_rows for p in parts):
+        raise ValueError("column blocks disagree on the row dimension")
+    dtype = np.result_type(*[p.values.dtype for p in parts])
+    vals, rows, cps = [], [], [np.zeros(1, np.int64)]
+    offset = 0
+    for p in parts:
+        nnz = p.nnz
+        vals.append(_np(p.values)[:nnz])
+        rows.append(_np(p.row_indices)[:nnz])
+        cps.append(_np(p.col_ptr).astype(np.int64)[1:] + offset)
+        offset += nnz
+    n_cols = sum(p.n_cols for p in parts)
+    return CSC(
+        np.concatenate(vals).astype(dtype, copy=False) if offset
+        else np.zeros(0, dtype),
+        np.concatenate(rows).astype(np.int32) if offset
+        else np.zeros(0, np.int32),
+        np.concatenate(cps).astype(np.int32),
+        (n_rows, n_cols),
+    )
+
+
+def merge_csc_partials(parts, shape, dtype=None) -> CSC:
+    """Sum same-shape partial products C = sum_k parts[k] into one CSC.
+
+    The merge layer of the tiled executor (DESIGN.md §8): each part is one
+    row block's contribution ``A[:, k] @ B[k, :]``.  Output columns are
+    canonical (rows strictly ascending); each element accumulates its
+    per-part contributions in the given (k-ascending) order, so the merge is
+    deterministic.  Entries that cancel to exactly 0.0 across parts are kept
+    explicit — dropping them would make the output pattern value-dependent,
+    which would defeat pattern-keyed plan reuse downstream.
+
+    A single part is returned unchanged (bit-identical passthrough), which
+    is what makes single-row-block grids exactly reproduce untiled results.
+    """
+    parts = [p for p in parts]
+    if not parts:
+        return csc_empty(shape, dtype or np.float64)
+    if any(tuple(p.shape) != tuple(shape) for p in parts):
+        raise ValueError(
+            f"partial shapes {[p.shape for p in parts]} != merged {shape}")
+    if len(parts) == 1:
+        return parts[0]
+    m, n = shape
+    dtype = dtype or np.result_type(*[p.values.dtype for p in parts])
+    all_rows, all_cols, all_vals, all_k = [], [], [], []
+    for k, p in enumerate(parts):
+        nnz = p.nnz
+        if nnz == 0:
+            continue
+        cp = _np(p.col_ptr).astype(np.int64)
+        all_rows.append(_np(p.row_indices)[:nnz].astype(np.int64))
+        all_cols.append(np.repeat(np.arange(n, dtype=np.int64), np.diff(cp)))
+        all_vals.append(_np(p.values)[:nnz])
+        all_k.append(np.full(nnz, k, np.int64))
+    if not all_rows:
+        return csc_empty(shape, dtype)
+    rows = np.concatenate(all_rows)
+    cols = np.concatenate(all_cols)
+    vals = np.concatenate(all_vals).astype(dtype, copy=False)
+    ktag = np.concatenate(all_k)
+    # sort by (col, row, k): equal (col, row) runs are contiguous with parts
+    # in k order, so the unbuffered add accumulates each element's
+    # contributions deterministically, k-ascending
+    order = np.lexsort((ktag, rows, cols))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    key = cols * m + rows
+    boundary = np.empty(len(key), bool)
+    boundary[0] = True
+    boundary[1:] = key[1:] != key[:-1]
+    seg = np.cumsum(boundary) - 1
+    sums = np.zeros(int(seg[-1]) + 1, dtype)
+    np.add.at(sums, seg, vals)
+    u_rows = rows[boundary].astype(np.int32)
+    u_cols = cols[boundary]
+    col_ptr = np.zeros(n + 1, np.int32)
+    np.add.at(col_ptr[1:], u_cols, 1)
+    np.cumsum(col_ptr, out=col_ptr)
+    return CSC(sums, u_rows, col_ptr, (m, n))

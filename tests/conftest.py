@@ -1,8 +1,14 @@
 """Lock the jax backend to this container's single CPU device before any
 test can import repro.launch.dryrun (which sets the 512-fake-device XLA flag
-for the dry-run entry point — that flag must never apply to tests)."""
+for the dry-run entry point — that flag must never apply to tests).
+
+Also re-exports the shared ``bit_identical`` CSC-equality helper
+(``from conftest import bit_identical``; the single implementation lives
+in ``repro.sparse.format.csc_bit_identical``)."""
 
 import jax
+
+from repro.sparse.format import csc_bit_identical as bit_identical  # noqa: F401
 
 
 def pytest_configure(config):

@@ -1,0 +1,66 @@
+"""`hybrid_split` boundary behavior (ISSUE 3 satellite): columns with
+Op_j == t exactly, all-above-t, all-below-t — at the analysis level and
+end-to-end through the hybrid executors."""
+
+import numpy as np
+import pytest
+
+from repro.core import hybrid_split, preprocess, spgemm, spgemm_dense
+from repro.sparse import ops_per_column, random_powerlaw_csc
+from repro.sparse.format import csc_equal
+
+
+def test_exact_threshold_columns_go_to_spa():
+    # Op_j >= t is the SPA head (paper Section 3.3): equality included
+    ops_sorted = np.asarray([100, 40, 40, 40, 10, 2])
+    assert hybrid_split(ops_sorted, 40.0) == 4
+    assert hybrid_split(ops_sorted, 41.0) == 1
+    assert hybrid_split(ops_sorted, 10.0) == 5
+
+
+def test_all_above_threshold():
+    ops_sorted = np.asarray([90, 80, 70])
+    assert hybrid_split(ops_sorted, 40.0) == 3       # everything SPA
+    assert hybrid_split(ops_sorted, 70.0) == 3       # boundary inclusive
+
+
+def test_all_below_threshold():
+    ops_sorted = np.asarray([30, 20, 5])
+    assert hybrid_split(ops_sorted, 40.0) == 0       # everything blocked
+
+
+def test_degenerate_thresholds_and_empty():
+    ops_sorted = np.asarray([30, 20, 5])
+    assert hybrid_split(ops_sorted, 0.0) == 3        # t=0 -> all SPA
+    assert hybrid_split(ops_sorted, -1.0) == 3
+    assert hybrid_split(ops_sorted, np.inf) == 0     # t=inf -> all blocked
+    assert hybrid_split(np.zeros(0, np.int64), 40.0) == 0
+
+
+def test_split_equals_count_of_columns_at_or_above_t():
+    a = random_powerlaw_csc(80, 3.0, seed=0)
+    ops = ops_per_column(a, a)
+    ops_sorted = np.sort(ops)[::-1]
+    # draw thresholds from the actual loads so ties are exercised
+    for t in sorted({int(ops_sorted[i]) for i in (0, 10, 40, 79)}):
+        if t <= 0:
+            continue
+        assert hybrid_split(ops_sorted, float(t)) == int((ops >= t).sum())
+
+
+@pytest.mark.parametrize("t_kind", ("all_above", "all_below", "exact"))
+def test_hybrid_end_to_end_at_boundaries(t_kind):
+    a = random_powerlaw_csc(48, 3.0, seed=1)
+    ops = ops_per_column(a, a)
+    if t_kind == "all_above":
+        t = float(ops.min())                 # every column Op_j >= t
+    elif t_kind == "all_below":
+        t = float(ops.max()) + 1.0           # every column Op_j < t
+    else:
+        t = float(np.sort(ops)[len(ops) // 2])   # an exact tie value
+    pre = preprocess(a, a, t=t, b_min=32, b_max=64)
+    assert pre.split == int((ops >= t).sum())
+    for method in ("h-hash-32/256", "h-spa-16/64"):
+        c = spgemm(a, a, method=method, t=t, cache=False)
+        assert csc_equal(c, spgemm_dense(a, a), rtol=1e-9, atol=1e-11), \
+            (method, t_kind)

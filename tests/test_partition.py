@@ -1,0 +1,189 @@
+"""Tile partition/stitch primitives: slicing round-trips, value-gather
+metadata, the k-merge reduction, and grid-boundary helpers (DESIGN.md §8)."""
+
+import numpy as np
+import pytest
+
+from conftest import bit_identical as _bit_identical
+from repro.sparse import (
+    auto_tile_grid,
+    csc_col_slice,
+    csc_empty,
+    csc_hstack,
+    csc_row_slice,
+    merge_csc_partials,
+    nnz_balanced_col_bounds,
+    random_density_csc,
+    random_powerlaw_csc,
+    validate_csc,
+    width_col_bounds,
+)
+from repro.sparse.format import CSC, csc_from_dense, csc_to_dense
+
+
+# --- slicing ---------------------------------------------------------------
+
+
+def test_col_slice_matches_dense_and_value_range():
+    m = random_powerlaw_csc(40, 3.0, seed=0)
+    d = csc_to_dense(m)
+    sl, (lo, hi) = csc_col_slice(m, 5, 21)
+    assert sl.shape == (40, 16)
+    np.testing.assert_array_equal(csc_to_dense(sl), d[:, 5:21])
+    # the slice's values are the contiguous [lo, hi) range of the parent's
+    np.testing.assert_array_equal(
+        np.asarray(sl.values), np.asarray(m.values)[lo:hi])
+    validate_csc(sl)
+
+
+def test_col_slice_hstack_round_trip_bit_identical():
+    m = random_powerlaw_csc(30, 4.0, seed=1)
+    for bounds in ([0, 7, 13, 30], [0, 30], list(range(31))):
+        parts = [csc_col_slice(m, j0, j1)[0]
+                 for j0, j1 in zip(bounds[:-1], bounds[1:])]
+        assert _bit_identical(csc_hstack(parts, m.n_rows), m)
+
+
+def test_row_slice_matches_dense_and_gather():
+    m = random_density_csc(24, 18, 0.3, seed=2)
+    d = csc_to_dense(m)
+    sl, idx = csc_row_slice(m, 6, 17)
+    assert sl.shape == (11, 18)
+    np.testing.assert_array_equal(csc_to_dense(sl), d[6:17, :])
+    validate_csc(sl)
+    # the gather is pattern-static: it re-slices any same-pattern value set
+    rng = np.random.default_rng(0)
+    new_vals = rng.normal(size=m.nnz)
+    resliced = CSC(new_vals[idx], sl.row_indices, sl.col_ptr, sl.shape)
+    ref = csc_from_dense(csc_to_dense(
+        CSC(new_vals, m.row_indices, m.col_ptr, m.shape))[6:17, :])
+    np.testing.assert_allclose(csc_to_dense(resliced), csc_to_dense(ref),
+                               rtol=0, atol=0)
+
+
+def test_row_slices_partition_all_entries():
+    m = random_powerlaw_csc(32, 3.0, seed=3)
+    bounds = [0, 10, 20, 32]
+    total = 0
+    for i0, i1 in zip(bounds[:-1], bounds[1:]):
+        sl, idx = csc_row_slice(m, i0, i1)
+        assert sl.nnz == len(idx)
+        total += sl.nnz
+    assert total == m.nnz
+
+
+def test_slice_range_errors():
+    m = random_powerlaw_csc(10, 2.0, seed=4)
+    with pytest.raises(ValueError):
+        csc_col_slice(m, 3, 11)
+    with pytest.raises(ValueError):
+        csc_col_slice(m, -1, 5)
+    with pytest.raises(ValueError):
+        csc_row_slice(m, 5, 3)
+
+
+def test_empty_slices():
+    m = random_powerlaw_csc(12, 2.0, seed=5)
+    sl, (lo, hi) = csc_col_slice(m, 4, 4)
+    assert sl.shape == (12, 0) and sl.nnz == 0 and lo == hi
+    sl, idx = csc_row_slice(m, 7, 7)
+    assert sl.shape == (0, 12) and sl.nnz == 0 and len(idx) == 0
+
+
+# --- merge -----------------------------------------------------------------
+
+
+def test_merge_partials_exact_sum_of_dense():
+    rng = np.random.default_rng(6)
+    shape = (20, 14)
+    parts = []
+    for s in range(3):
+        d = rng.integers(-3, 4, size=shape).astype(np.float64)
+        d *= rng.uniform(size=shape) < 0.3
+        parts.append(csc_from_dense(d))
+    merged = merge_csc_partials(parts, shape)
+    validate_csc(merged, sorted_rows=True)
+    # integer values: the sum is exact regardless of association
+    np.testing.assert_array_equal(
+        csc_to_dense(merged),
+        sum(csc_to_dense(p) for p in parts))
+
+
+def test_merge_single_part_is_passthrough():
+    p = random_powerlaw_csc(16, 3.0, seed=7)
+    assert merge_csc_partials([p], p.shape) is p
+
+
+def test_merge_keeps_cancelled_entries_explicit():
+    d = np.zeros((4, 3))
+    d[1, 1] = 2.5
+    p1 = csc_from_dense(d)
+    p2 = csc_from_dense(-d)
+    merged = merge_csc_partials([p1, p2], (4, 3))
+    assert merged.nnz == 1            # pattern is value-independent
+    assert float(np.asarray(merged.values)[0]) == 0.0
+
+
+def test_merge_accumulates_in_k_order():
+    # three partials hitting one element: fold order must be k-ascending
+    vals = [1e16, 1.0, -1e16]
+    parts = []
+    for v in vals:
+        d = np.zeros((2, 2))
+        d[0, 0] = v
+        parts.append(csc_from_dense(d))
+    merged = merge_csc_partials(parts, (2, 2))
+    expect = ((vals[0] + vals[1]) + vals[2])   # == 0.0, not 1.0
+    assert float(csc_to_dense(merged)[0, 0]) == expect
+
+
+def test_merge_empty_and_shape_errors():
+    out = merge_csc_partials([], (5, 4))
+    assert out.shape == (5, 4) and out.nnz == 0
+    with pytest.raises(ValueError):
+        merge_csc_partials(
+            [csc_empty((3, 3)), csc_empty((3, 4))], (3, 3))
+
+
+def test_hstack_errors():
+    with pytest.raises(ValueError):
+        csc_hstack([], 4)
+    with pytest.raises(ValueError):
+        csc_hstack([csc_empty((3, 2)), csc_empty((4, 2))], 3)
+
+
+# --- grid boundaries -------------------------------------------------------
+
+
+def test_width_col_bounds():
+    np.testing.assert_array_equal(width_col_bounds(10, 4), [0, 4, 8, 10])
+    np.testing.assert_array_equal(width_col_bounds(8, 8), [0, 8])
+    np.testing.assert_array_equal(width_col_bounds(3, 100), [0, 3])
+    np.testing.assert_array_equal(width_col_bounds(0, 4), [0])
+    with pytest.raises(ValueError):
+        width_col_bounds(10, 0)
+
+
+def test_nnz_balanced_bounds_properties():
+    m = random_powerlaw_csc(60, 3.0, seed=8)
+    for nb in (1, 2, 4, 7, 60):
+        bounds = nnz_balanced_col_bounds(m, nb)
+        assert bounds[0] == 0 and bounds[-1] == m.n_cols
+        assert (np.diff(bounds) >= 1).all()
+        assert len(bounds) - 1 <= nb
+    # balance: with a heavy head, the head block holds fewer columns
+    d = np.zeros((32, 32))
+    d[:, :4] = 1.0
+    d[0, 4:] = 1.0
+    skew = csc_from_dense(d)
+    bounds = nnz_balanced_col_bounds(skew, 2)
+    assert bounds[1] < 16   # the cut lands inside/near the dense head
+
+
+def test_auto_tile_grid_scales_with_nnz():
+    small = random_powerlaw_csc(20, 2.0, seed=9)
+    assert auto_tile_grid(small, small) == (1, 1)
+    big = random_powerlaw_csc(600, 40.0, seed=10)
+    k_blocks, n_blocks = auto_tile_grid(big, big)
+    assert n_blocks > 1          # past the n-axis nnz target
+    assert k_blocks >= 1

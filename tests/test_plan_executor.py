@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (
     ALGORITHMS, pattern_fingerprint, plan_cache_clear, plan_cache_info,
-    plan_spgemm, spgemm, spgemm_dense,
+    plan_cache_resize, plan_spgemm, spgemm, spgemm_dense,
 )
 from repro.core import api as core_api
 from repro.sparse import random_powerlaw_csc, random_uniform_csc
@@ -199,7 +199,75 @@ def test_plan_cache_hit_miss_and_eviction(monkeypatch):
     assert plan_cache_info()["size"] <= 2
     plan_cache_clear()
     assert plan_cache_info() == {
-        "hits": 0, "misses": 0, "size": 0, "max_size": 2}
+        "hits": 0, "misses": 0, "size": 0, "max_size": 2, "hit_rate": 0.0}
+
+
+def test_plan_cache_resize_and_hit_rate(monkeypatch):
+    """plan_cache_resize() is the supported capacity knob (no module-constant
+    mutation) and plan_cache_info() reports the hit rate."""
+    monkeypatch.setattr(core_api, "PLAN_CACHE_SIZE", 64)
+    plan_cache_clear()
+    mats = [random_powerlaw_csc(40, 3.0, seed=s) for s in range(4)]
+    for m in mats:
+        spgemm(m, m, method="spa")
+    assert plan_cache_info()["size"] == 4
+    # shrinking evicts the least-recently-used down to the new capacity
+    info = plan_cache_resize(2)
+    assert info["size"] == 2 and info["max_size"] == 2
+    spgemm(mats[0], mats[0], method="spa")     # evicted earlier -> miss
+    spgemm(mats[3], mats[3], method="spa")     # most recent -> hit
+    info = plan_cache_info()
+    assert info["hits"] == 1 and info["misses"] == 5
+    assert info["hit_rate"] == pytest.approx(1 / 6)
+    # growing keeps entries; zero disables caching entirely
+    assert plan_cache_resize(64)["max_size"] == 64
+    assert plan_cache_resize(0)["size"] == 0
+    spgemm(mats[1], mats[1], method="spa")
+    assert plan_cache_info()["size"] == 0
+    with pytest.raises(ValueError):
+        plan_cache_resize(-1)
+    plan_cache_resize(64)
+    plan_cache_clear()
+
+
+# --- held-plan argument conflicts (ISSUE 3 satellite) ---------------------
+
+
+def test_held_plan_conflicting_arguments_raise():
+    a = random_uniform_csc(32, 3, seed=5)
+    plan = plan_spgemm(a, a, "h-hash-256/256")
+    # conflicting method/backend/params are loud, not silently ignored
+    with pytest.raises(ValueError, match="conflict.*method"):
+        spgemm(a, a, method="spa", plan=plan)
+    with pytest.raises(ValueError, match="conflict.*backend"):
+        spgemm(a, a, backend="pallas", plan=plan)
+    with pytest.raises(ValueError, match="conflict.*t="):
+        spgemm(a, a, t=7.0, plan=plan)
+    with pytest.raises(ValueError, match="conflict.*b_min"):
+        spgemm(a, a, b_min=16, plan=plan)
+    with pytest.raises(ValueError, match="conflict.*b_max"):
+        spgemm(a, a, b_max=16, plan=plan)
+    # matching arguments (and None) pass through
+    c = spgemm(a, a, method="h-hash-256/256", backend="host", t=40,
+               b_min=256, b_max=256, plan=plan)
+    assert _bit_identical(c, plan.execute(a, a))
+    # a parameterless plan rejects any explicit parameter
+    spa_plan = plan_spgemm(a, a, "spa")
+    with pytest.raises(ValueError, match="conflict"):
+        spgemm(a, a, t=40.0, plan=spa_plan)
+
+
+def test_held_plan_conflicts_batched():
+    from repro.core import spgemm_batched
+    from repro.sparse import BatchedCSC
+
+    a = random_uniform_csc(24, 2, seed=6)
+    plan = plan_spgemm(a, a, "spa")
+    ab = BatchedCSC.stack([a, a])
+    with pytest.raises(ValueError, match="conflict"):
+        spgemm_batched(ab, ab, method="hash-256/256", plan=plan)
+    got = spgemm_batched(ab, ab, method="spa", plan=plan)
+    assert _bit_identical(got[0], plan.execute(a, a))
 
 
 def test_fingerprint_ignores_values():
