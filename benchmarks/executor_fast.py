@@ -1,0 +1,127 @@
+"""Stream-engine vs naive-executor numeric throughput (DESIGN.md §9).
+
+Workload: the PR 3 mixed-density multiply (dense B column block hitting A's
+heavy columns + a long sparse tail), executed in the plan-reuse regime —
+symbolic phase held, numeric phase timed.  Each host method/engine pair is
+measured single-call and batched (B value sets through one call), so the
+report shows both levers the product stream pulls: the per-call Python-loop
+elimination and the free value-axis broadcast.
+
+Correctness gates before timings are trusted: every engine's result is
+checked against the naive SPA oracle (atol-level; the stream re-associates
+sums), and the batched stream path must be bit-identical to looping the
+single-call stream path.
+
+PASS criterion (ISSUE 4): the stream engine >= 10x faster than the naive
+host SPA numeric phase on the mixed-density workload, single-call.
+
+    PYTHONPATH=src python benchmarks/executor_fast.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from _util import bit_identical, median_time, write_report
+from tiled import mixed_density_pair
+from repro.core import plan_spgemm
+from repro.sparse.format import csc_to_dense
+
+REQUIRED_SPEEDUP = 10.0
+CRITERION = ("spa", "naive")          # baseline the stream is measured vs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=256)
+    ap.add_argument("--n-sparse", type=int, default=4032)
+    ap.add_argument("--dense-a", type=int, default=32)
+    ap.add_argument("--dense-b", type=int, default=64)
+    ap.add_argument("--per-dense", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_executor.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small matrices, B=8, 2 reps)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.m, args.n_sparse = 128, 496
+        args.dense_a = args.dense_b = args.per_dense = 16
+        args.batch, args.reps = 8, 2
+
+    a, b = mixed_density_pair(args.m, args.n_sparse, args.dense_a,
+                              args.dense_b, args.per_dense)
+    rng = np.random.default_rng(1)
+    av = rng.normal(size=(args.batch, a.nnz))
+    bv = rng.normal(size=(args.batch, b.nnz))
+    plan = plan_spgemm(a, b, "spa")       # stream metadata rides any host plan
+    ref = csc_to_dense(plan.execute(a, b, engine="naive"))
+    n_products = plan.stream.n_products if plan.stream is not None else None
+    print(f"mixed-density workload: A {a.shape} nnz={a.nnz}, B {b.shape} "
+          f"nnz={b.nnz}, products={n_products}, B={args.batch}, "
+          f"reps={args.reps}\n")
+
+    results = []
+    print(f"{'method':8s} {'engine':8s} {'t_single':>11s} "
+          f"{'t_batched/call':>15s}")
+    for method, engine in (("spa", "naive"), ("expand", "naive"),
+                           ("spa", "stream"), ("expand", "stream")):
+        p = plan_spgemm(a, b, method)
+        run = lambda: p.execute(a, b, engine=engine)
+        ok = np.allclose(csc_to_dense(run()), ref, rtol=1e-9, atol=1e-11)
+        t_single = median_time(run, args.reps)
+        run_b = lambda: p.execute_batched(av, bv, engine=engine)
+        batched = run_b()
+        t_batched = median_time(run_b, args.reps)
+        if engine == "stream":
+            looped = [p.execute(av[i], bv[i], engine="stream")
+                      for i in range(args.batch)]
+            ok = ok and all(
+                bit_identical(x, y) for x, y in zip(batched, looped))
+        print(f"{method:8s} {engine:8s} {t_single*1e3:10.3f}ms "
+              f"{t_batched/args.batch*1e3:14.3f}ms"
+              f"{'' if ok else '   !! MISMATCH'}")
+        results.append({
+            "method": method, "engine": engine,
+            "t_single_ms": t_single * 1e3,
+            "t_batched_per_call_ms": t_batched / args.batch * 1e3,
+            "correct": ok,
+        })
+
+    def t_of(method, engine):
+        return next(r for r in results
+                    if (r["method"], r["engine"]) == (method, engine))
+
+    base = t_of(*CRITERION)["t_single_ms"]
+    stream = t_of("spa", "stream")["t_single_ms"]
+    speedup = base / max(stream, 1e-9)
+    ok = speedup >= REQUIRED_SPEEDUP and all(r["correct"] for r in results)
+    report = {
+        "bench": "executor_fast",
+        "config": {"m": args.m, "n_sparse": args.n_sparse,
+                   "dense_a": args.dense_a, "dense_b": args.dense_b,
+                   "per_dense": args.per_dense, "batch": args.batch,
+                   "reps": args.reps, "smoke": args.smoke,
+                   "stream_products": n_products},
+        "results": results,
+        "criterion": {
+            "baseline": f"{CRITERION[1]}/{CRITERION[0]}",
+            "required_speedup": REQUIRED_SPEEDUP,
+            "measured_speedup": speedup,
+            "passed": ok,
+        },
+    }
+    write_report(args.out, report)
+    print(f"criterion: stream {speedup:.1f}x vs naive host spa "
+          f"(need >= {REQUIRED_SPEEDUP:.0f}x) -> "
+          f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,11 +1,18 @@
-"""Tiled auto-method SpGEMM benchmark (DESIGN.md §8).
+"""Tiled auto-method SpGEMM benchmark (DESIGN.md §8–§9).
 
 Workload: a mixed-density multiply — B carries a dense column block whose
-entries reference A's heavy columns (huge flops per stored entry: the SPA
-regime) and a long sparse tail referencing A's light columns (thousands of
-nearly-empty columns: the expand regime).  No single fixed method is right
-for both; ``method="auto"`` tiles the operands and lets the cost model pick
-per tile.
+entries reference A's heavy columns (huge flops per stored entry) and a
+long sparse tail referencing A's light columns (thousands of nearly-empty
+columns).  Since the product-stream engine (ISSUE 4), host regimes split on
+the *plan-memory guard*: tiles whose stream fits the guard replay it
+vectorized (method ``expand``), while guard-tripped flop-heavy tiles pay a
+per-call transient rebuild and fall back to SPA.  No single fixed method is
+right for both; ``method="auto"`` tiles the operands and lets the cost
+model pick per tile.
+
+The guard is scaled with the workload (``--stream-guard``, default: the
+dense block's flop count / 8) so every bench size — including ``--smoke`` —
+exercises both regimes; production uses ``fast.STREAM_MAX_PRODUCTS``.
 
 Each method is timed in the plan-reuse regime (symbolic phase held, numeric
 phase timed), and the per-tile choices of the auto plan are recorded to
@@ -29,6 +36,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from _util import median_time, write_report
+import repro.core.fast as fast
 from repro.core import plan_spgemm, plan_spgemm_tiled
 from repro.sparse.format import CSC, csc_from_dense, csc_to_dense
 
@@ -69,6 +77,9 @@ def main():
     ap.add_argument("--tile-n", type=int, default=1024)
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--out", default="BENCH_tiled.json")
+    ap.add_argument("--stream-guard", type=int, default=None,
+                    help="plan-memory guard (products); default scales "
+                         "with the dense block so both host regimes run")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (small matrices, 2 reps)")
     ap.add_argument("--calibrate", action="store_true",
@@ -77,19 +88,28 @@ def main():
     if args.calibrate:
         return calibrate()
     if args.smoke:
-        args.m, args.n_sparse = 128, 496
-        args.dense_a = args.dense_b = args.per_dense = 16
-        args.tile_n, args.reps = 128, 2
+        # large enough that the regime split dominates timer noise (the
+        # auto-vs-fixed margin at the old 128-wide size was ~1.0x +- noise)
+        args.m, args.n_sparse = 192, 1008
+        args.dense_a = args.dense_b = args.per_dense = 24
+        args.tile_n, args.reps = 64, 3
+
+    guard = args.stream_guard
+    if guard is None:
+        guard = (args.dense_b * args.per_dense * args.m) // 8
+    fast.STREAM_MAX_PRODUCTS = guard   # scale the budget to the workload
 
     a, b = mixed_density_pair(args.m, args.n_sparse, args.dense_a,
                               args.dense_b, args.per_dense)
     print(f"mixed-density workload: A {a.shape} nnz={a.nnz}, "
-          f"B {b.shape} nnz={b.nnz}, reps={args.reps}\n")
+          f"B {b.shape} nnz={b.nnz}, reps={args.reps}, "
+          f"stream guard={guard} products\n")
 
     results = {}
     print(f"{'method':12s} {'numeric/call':>13s}")
     for method in FIXED_METHODS:
         plan = plan_spgemm(a, b, method)
+        plan.execute(a, b)   # warmup: lazy one-time plan state built here
         tt = median_time(lambda: plan.execute(a, b), args.reps)
         results[method] = {"t_exec_ms": tt * 1e3}
         print(f"{method:12s} {tt*1e3:12.2f}ms")
@@ -124,7 +144,8 @@ def main():
         "config": {"m": args.m, "n_sparse": args.n_sparse,
                    "dense_a": args.dense_a, "dense_b": args.dense_b,
                    "per_dense": args.per_dense, "tile_n": args.tile_n,
-                   "reps": args.reps, "smoke": args.smoke},
+                   "reps": args.reps, "smoke": args.smoke,
+                   "stream_guard": guard},
         "results": results,
         "criterion": {
             "best_fixed": best_fixed,
@@ -150,8 +171,10 @@ def main():
 def calibrate():
     """Measure the host executors' cost structure and print a
     ``CostConstants`` literal for ``core/cost.py``."""
+    from repro.core import plan_spgemm
     from repro.core.naive import spa_numpy
     from repro.core.expand import spgemm_expand
+    from repro.sparse import random_powerlaw_csc
 
     rng = np.random.default_rng(0)
 
@@ -188,17 +211,29 @@ def calibrate():
     spa_flop = (best_of(lambda: spa_numpy(a2, b2), reps=3)
                 - spa_col * n - spa_entry * b2.nnz) / flops
 
-    # expand: per-product cost at a large product stream; split off a
-    # log2-proportional sort share (the lexsort term)
+    # guard-tripped expand: per-product cost of the transient rebuild path
+    # at a large product stream; split off a log2-proportional sort share
     t_exp = best_of(lambda: spgemm_expand(a2, b2), reps=3)
     per_prod = t_exp / flops
     expand_sort = 8.0e-9
     expand_prod = max(per_prod - expand_sort * np.log2(flops), 1e-9)
 
+    # stream engine: flat per-product replay cost on the big stream, call
+    # overhead on a near-empty one (plans held: symbolic phase excluded)
+    p2 = plan_spgemm(a2, b2, "expand")
+    t_stream = best_of(lambda: p2.execute(a2, b2, engine="stream"), reps=3)
+    stream_prod = t_stream / flops
+    tiny = random_powerlaw_csc(16, 2.0, seed=1)
+    pt = plan_spgemm(tiny, tiny, "expand")
+    stream_base = best_of(
+        lambda: pt.execute(tiny, tiny, engine="stream"), reps=20)
+
     print("measured host constants (paste into core/cost.py):")
     print("CostConstants(")
     print(f"    spa_col={spa_col:.1e}, spa_entry={spa_entry:.1e}, "
           f"spa_flop={spa_flop:.1e},")
+    print(f"    stream_base={stream_base:.1e}, "
+          f"stream_prod={stream_prod:.1e},")
     print(f"    expand_base=1.0e-4, expand_prod={expand_prod:.1e}, "
           f"expand_sort={expand_sort:.1e},")
     print(")")

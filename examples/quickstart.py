@@ -81,41 +81,51 @@ def plan_reuse_demo():
 
 def auto_method_demo():
     """method="auto": per-tile method selection on a mixed-density matrix
-    (DESIGN.md §8) — the cost model routes dense column blocks to SPA and
-    the sparse tail to expand, beating every fixed method."""
+    (DESIGN.md §8–§9) — tiles whose product stream fits the plan-memory
+    guard run the vectorized stream engine (expand); guard-tripped
+    flop-heavy blocks fall back to SPA.  The guard is scaled to this demo's
+    size (as benchmarks/tiled.py does) so both regimes show."""
     import time
 
+    import repro.core.fast as fast
     from repro.core import plan_spgemm_tiled
     from repro.sparse.format import csc_from_dense
 
     rng = np.random.default_rng(0)
     m, heavy, dense_b, n = 192, 24, 48, 768
-    ad = np.zeros((m, m))
-    ad[:, :heavy] = rng.uniform(0.5, 1.5, size=(m, heavy))  # heavy A cols
-    for j in range(heavy, m):
-        ad[rng.integers(m, size=2), j] = 1.0
-    bd = np.zeros((m, n))
-    for j in range(dense_b):        # dense B block hits the heavy A columns
-        bd[rng.integers(heavy, size=16), j] = 1.0
-    for j in range(dense_b, n):     # long sparse tail hits the light ones
-        bd[heavy + rng.integers(m - heavy, size=2), j] = 1.0
-    a, b = csc_from_dense(ad), csc_from_dense(bd)
-    print(f"\n=== method='auto' (mixed density: {dense_b} flop-heavy + "
-          f"{n - dense_b} sparse columns) ===")
-    rows = []
-    for method in ("spa", "expand"):
-        plan = plan_spgemm(a, b, method)
+    old_guard = fast.STREAM_MAX_PRODUCTS
+    fast.STREAM_MAX_PRODUCTS = (dense_b * 16 * m) // 8
+    try:
+        ad = np.zeros((m, m))
+        ad[:, :heavy] = rng.uniform(0.5, 1.5, size=(m, heavy))  # heavy cols
+        for j in range(heavy, m):
+            ad[rng.integers(m, size=2), j] = 1.0
+        bd = np.zeros((m, n))
+        for j in range(dense_b):    # dense B block hits the heavy A columns
+            bd[rng.integers(heavy, size=16), j] = 1.0
+        for j in range(dense_b, n):  # long sparse tail hits the light ones
+            bd[heavy + rng.integers(m - heavy, size=2), j] = 1.0
+        a, b = csc_from_dense(ad), csc_from_dense(bd)
+        print(f"\n=== method='auto' (mixed density: {dense_b} flop-heavy + "
+              f"{n - dense_b} sparse columns) ===")
+        rows = []
+        for method in ("spa", "expand"):
+            plan = plan_spgemm(a, b, method)
+            plan.execute(a, b)   # warmup: lazy one-time plan state
+            t0 = time.perf_counter()
+            plan.execute(a, b)
+            rows.append((method, time.perf_counter() - t0, ""))
+        tiled = plan_spgemm_tiled(a, b, tile=(None, 96))
+        stats = {}
+        tiled.execute(a, b)      # warmup
         t0 = time.perf_counter()
-        plan.execute(a, b)
-        rows.append((method, time.perf_counter() - t0, ""))
-    tiled = plan_spgemm_tiled(a, b, tile=(None, 96))
-    stats = {}
-    t0 = time.perf_counter()
-    tiled.execute(a, b, stats=stats)
-    rows.append(("auto", time.perf_counter() - t0,
-                 f"per-tile: {stats['methods']}"))
-    for name, t, note in rows:
-        print(f"{name:8s} {t*1e3:8.2f}ms  {note}")
+        tiled.execute(a, b, stats=stats)
+        rows.append(("auto", time.perf_counter() - t0,
+                     f"per-tile: {stats['methods']}"))
+        for name, t, note in rows:
+            print(f"{name:8s} {t*1e3:8.2f}ms  {note}")
+    finally:
+        fast.STREAM_MAX_PRODUCTS = old_guard
 
 
 def main():

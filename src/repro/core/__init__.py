@@ -34,9 +34,14 @@ from repro.core.planner import (
     plan_spgemm,
     plan_spgemm_tiled,
 )
+# NOTE: the mutable guard knob fast.STREAM_MAX_PRODUCTS is deliberately not
+# re-exported by value — read/set it on repro.core.fast so changes take
+# effect (planner/cost read it live)
+from repro.core.fast import ProductStream, build_product_stream
 from repro.core.executor import execute as execute_plan
 from repro.core.executor import execute_batched as execute_plan_batched
 from repro.core.executor import execute_tiled, execute_tiled_batched
+from repro.core.executor import resolve_engine
 from repro.core.api import (
     ALGORITHMS,
     plan_cache_clear,
@@ -76,6 +81,9 @@ __all__ = [
     "execute_plan_batched",
     "execute_tiled",
     "execute_tiled_batched",
+    "ProductStream",
+    "build_product_stream",
+    "resolve_engine",
     "plan_cache_clear",
     "plan_cache_info",
     "plan_cache_resize",

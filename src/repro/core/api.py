@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
+import repro.core.fast as _fast
 from repro.core.cost import AUTO_CANDIDATES
 from repro.core.planner import (
     ALGORITHMS,
@@ -57,11 +58,25 @@ def plan_cache_clear() -> None:
 
 
 def plan_cache_info() -> dict:
-    """Current cache occupancy, hit/miss counters, and hit rate."""
+    """Current cache occupancy, hit/miss counters, and hit rate.
+
+    ``stream_bytes`` totals the product-stream index data materialized by
+    cached host plans, including streams held through tiled plans' child
+    tile plans (each counted once even when shared) — see DESIGN.md §9.
+    The guard bounds each *plan's* stream; the LRU bounds entries, but a
+    tiled plan holds one guard-sized stream per distinct tile pattern, so
+    watch this number (and shrink via ``plan_cache_resize`` or a lower
+    guard) when caching large tiled workloads.
+    """
     lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
+    seen: dict = {}
+    for p in _PLAN_CACHE.values():
+        for sp in [t.plan for t in getattr(p, "tiles", ())] or [p]:
+            seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
     return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
                 max_size=PLAN_CACHE_SIZE,
-                hit_rate=_CACHE_STATS["hits"] / lookups if lookups else 0.0)
+                hit_rate=_CACHE_STATS["hits"] / lookups if lookups else 0.0,
+                stream_bytes=sum(seen.values()))
 
 
 def plan_cache_resize(n: int) -> dict:
@@ -100,8 +115,13 @@ def _cache_put(key, plan):
 
 def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
                  params: dict) -> SpgemmPlan:
+    # for host plans the stream guard is part of the key: plans resolve it
+    # at build time, so changing fast.STREAM_MAX_PRODUCTS must not hand
+    # back plans built under the old budget.  Pallas plans carry no stream
+    # (stream_limit=None), so the knob must not invalidate them.
     key = (pattern_fingerprint(a), pattern_fingerprint(b), method, backend,
-           tuple(sorted(params.items())))
+           tuple(sorted(params.items())),
+           _fast.STREAM_MAX_PRODUCTS if backend == "host" else None)
     plan = _cache_get(key)
     if plan is None:
         plan = plan_spgemm(a, b, method, backend=backend,
@@ -119,7 +139,8 @@ def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,
     cands = AUTO_CANDIDATES[backend] if candidates is None \
         else tuple(candidates)
     key = (pattern_fingerprint(a), pattern_fingerprint(b), "auto", backend,
-           spec, cands)
+           spec, cands,
+           _fast.STREAM_MAX_PRODUCTS if backend == "host" else None)
     plan = _cache_get(key)
     if plan is None:
         plan = plan_spgemm_tiled(a, b, backend=backend, tile=tile,
@@ -197,6 +218,7 @@ def spgemm(
     plan=None,
     cache: bool = True,
     validate: str | None = None,
+    engine: str | None = None,
 ) -> CSC:
     """Compute C = A @ B with one of the paper's algorithms, or ``"auto"``.
 
@@ -211,11 +233,19 @@ def spgemm(
     rebuilt from scratch, bypassing the LRU.  ``validate="fingerprint"``
     re-hashes the operand structure against the plan (O(nnz)) instead of
     the default O(1) shape/nnz check.
+
+    ``engine`` selects the host numeric engine (DESIGN.md §9):
+    ``"stream"`` replays the plan's vectorized product stream (canonical
+    output order, fp re-association vs the oracles), ``"naive"`` forces the
+    faithful per-method executor, ``None`` uses the method's default
+    (``"stream"`` for ``expand``, ``"naive"`` otherwise).  Engine choice is
+    per *execution*, not baked into the plan, so it never conflicts with
+    ``plan=``.
     """
     if plan is not None:
         _check_plan_overrides(plan, method, backend, t, b_min, b_max,
                               tile, candidates)
-        return plan.execute(a, b, validate=validate)
+        return plan.execute(a, b, validate=validate, engine=engine)
     method, backend = _resolve_method_backend(method, backend)
     _check_auto_only(method, t, b_min, b_max, tile, candidates)
     if method == "auto":
@@ -224,14 +254,14 @@ def spgemm(
         else:
             p = plan_spgemm_tiled(a, b, backend=backend, tile=tile,
                                   candidates=candidates, cache=False)
-        return p.execute(a, b, validate=validate)
+        return p.execute(a, b, validate=validate, engine=engine)
     params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
     if cache:
         p = _cached_plan(a, b, method, backend, params)
     else:
         p = plan_spgemm(a, b, method, backend=backend, t=params.get("t"),
                         b_min=params.get("b_min"), b_max=params.get("b_max"))
-    return p.execute(a, b, validate=validate)
+    return p.execute(a, b, validate=validate, engine=engine)
 
 
 def spgemm_batched(
@@ -248,6 +278,7 @@ def spgemm_batched(
     plan=None,
     cache: bool = True,
     validate: str | None = None,
+    engine: str | None = None,
 ) -> list:
     """B same-pattern multiplies C_b = A_b @ B_b through one plan execution.
 
@@ -257,7 +288,8 @@ def spgemm_batched(
     then all B value sets run through one set of kernel launches
     (``plan.execute_batched``, DESIGN.md §7).  ``method="auto"`` rides the
     tiled plan's batched path (§8).  Returns a list of B CSC results,
-    bit-identical to calling ``spgemm`` per element.
+    bit-identical to calling ``spgemm`` per element.  ``engine`` — as in
+    :func:`spgemm` (the stream engine broadcasts over the value axis).
 
     With ``plan`` the symbolic phase is skipped (conflicting explicit
     arguments raise, as in :func:`spgemm`) and ``a``/``b`` may also be raw
@@ -266,7 +298,7 @@ def spgemm_batched(
     if plan is not None:
         _check_plan_overrides(plan, method, backend, t, b_min, b_max,
                               tile, candidates)
-        return plan.execute_batched(a, b, validate=validate)
+        return plan.execute_batched(a, b, validate=validate, engine=engine)
     if not isinstance(a, BatchedCSC) or not isinstance(b, BatchedCSC):
         raise TypeError(
             "spgemm_batched operands must be BatchedCSC (use BatchedCSC"
@@ -284,11 +316,11 @@ def spgemm_batched(
         else:
             p = plan_spgemm_tiled(a0, b0, backend=backend, tile=tile,
                                   candidates=candidates, cache=False)
-        return p.execute_batched(a, b, validate=validate)
+        return p.execute_batched(a, b, validate=validate, engine=engine)
     params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
     if cache:
         p = _cached_plan(a0, b0, method, backend, params)
     else:
         p = plan_spgemm(a0, b0, method, backend=backend, t=params.get("t"),
                         b_min=params.get("b_min"), b_max=params.get("b_max"))
-    return p.execute_batched(a, b, validate=validate)
+    return p.execute_batched(a, b, validate=validate, engine=engine)

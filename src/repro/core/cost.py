@@ -7,15 +7,19 @@ the spirit of Nagasaka et al.'s per-region accumulator choice.
 
 Two separate models, selected by backend:
 
-* **host** — predicts wall time (seconds) of the numpy executors.  Their
+* **host** — predicts wall time (seconds) of the host executors.  Their
   cost structure is dominated by Python-loop overhead versus vectorized
   throughput: SPA pays a per-column and per-B-entry loop toll but touches
-  each product once; expand is fully vectorized but sorts the whole product
-  stream; the lock-step executors (SPARS/HASH) pay a Python iteration per
-  lock-step round.  Constants are calibrated by
-  ``benchmarks/tiled.py --calibrate`` (values below are from that script on
-  the CI container class; they only need to be right *relative* to each
-  other, and the regimes they separate differ by orders of magnitude).
+  each product once; ``expand`` replays the plan's cached product stream
+  (``core.fast``, DESIGN.md §9) — a flat per-product cost with no sort —
+  *when the stream fits the plan-memory guard*; above the guard every
+  execution rebuilds the stream transiently (lexsort + boundary scan per
+  call), which is where SPA wins back flop-heavy tiles.  The lock-step
+  executors (SPARS/HASH) pay a Python iteration per lock-step round.
+  Constants are calibrated by ``benchmarks/tiled.py --calibrate`` (values
+  below are from that script on the CI container class; they only need to
+  be right *relative* to each other, and the regimes they separate differ
+  by orders of magnitude).
 * **pallas** — predicts relative kernel work from the DESIGN.md §2 cost
   dictionary: SPA streams every B entry against an ``[m, L]`` tile, SPARS
   pays the block-max trip count against the same tile, HASH pays it against
@@ -34,12 +38,15 @@ import math
 
 import numpy as np
 
+import repro.core.fast as _fast
 from repro.sparse.stats import TileStats
 
 # default per-backend candidate sets for method="auto".  Host: the two
-# executors with complementary regimes (SPA: loop-bound, cheap per product;
-# expand: vectorized, pays the sort on big product streams).  Pallas: the
-# paper's families — dense-tile SPA vs small-table HASH, with SPARS between.
+# engines with complementary regimes (expand -> the plan-resident product
+# stream, cheapest per product while the stream fits the memory guard;
+# SPA: no plan-resident O(flops) state, wins guard-tripped flop-heavy
+# tiles).  Pallas: the paper's families — dense-tile SPA vs small-table
+# HASH, with SPARS between.
 AUTO_CANDIDATES = {
     "host": ("spa", "expand"),
     "pallas": ("spa", "spars-40/40", "hash-256/256"),
@@ -55,12 +62,17 @@ class CostConstants:
     """
 
     # host spa_numpy: per-column loop + per-B-entry vector op + per product
-    spa_col: float = 3.5e-6
-    spa_entry: float = 5.6e-6
-    spa_flop: float = 8.0e-9
-    # host spgemm_expand: vectorized pipeline + per-product stream/sort work
+    spa_col: float = 3.0e-6
+    spa_entry: float = 6.7e-6
+    spa_flop: float = 1.0e-8
+    # host stream engine (core/fast.py): fixed kernel-call overhead + flat
+    # per-product gather/multiply/segment-reduce cost (plan-resident stream)
+    stream_base: float = 5.9e-6
+    stream_prod: float = 6.6e-9
+    # guard-tripped expand: per-call transient stream rebuild (expansion +
+    # lexsort) on top of the per-product stream work
     expand_base: float = 1.0e-4
-    expand_prod: float = 7.0e-8
+    expand_prod: float = 1.5e-7
     expand_sort: float = 8.0e-9       # per product per log2(products)
     # host esc_numpy: expand + explicit LSD radix rounds
     esc_base: float = 2.0e-4
@@ -120,6 +132,10 @@ def _host_cost(stats: TileStats, method: str, c: CostConstants) -> float:
         return (c.spa_col * stats.n + c.spa_entry * stats.nnz_b
                 + c.spa_flop * flops)
     if fam == "expand":
+        if flops <= _fast.STREAM_MAX_PRODUCTS:
+            # plan-resident product stream: flat vectorized replay
+            return c.stream_base + c.stream_prod * flops
+        # guard-tripped: every call rebuilds the stream transiently
         return c.expand_base + flops * (
             c.expand_prod + c.expand_sort * math.log2(max(flops, 2)))
     if fam == "esc":

@@ -1,33 +1,45 @@
-"""Numeric SpGEMM execution of a cached symbolic plan (DESIGN.md §6–§7).
+"""Numeric SpGEMM execution of a cached symbolic plan (DESIGN.md §6–§9).
 
 ``execute(plan, a_values, b_values)`` runs only the value-dependent work of
 C = A @ B; every pattern-dependent decision (sorting, blocking, hash sizing,
-padded layouts, kernel groups) was made once by ``core.planner.plan_spgemm``.
+padded layouts, kernel groups, the product stream) was made once by
+``core.planner.plan_spgemm``.
 
-Host backend: binds the values to the planned patterns and dispatches to the
-faithful numpy executors, passing the plan's pre-computed ``Preprocess`` so
-nothing is re-analyzed.  Pallas backend: re-pads the values with the plan's
-gather indices (one vectorized gather per operand), launches one kernel per
-plan group via ``kernels.ops.run_{spa,spars,hash}``, and compacts each
-group's accumulator tile / hash tables straight into column-sliced CSC
-through ``sparse.format.CSCBuilder`` — the dense ``[m, n]`` sink of the
-pre-plan backend no longer exists; peak transient memory is one
-``[m, tile_cols]`` tile.
+Host backend — two engines, selected by ``engine=``:
+
+* ``"naive"`` — binds the values to the planned patterns and dispatches to
+  the faithful numpy executors, passing the plan's pre-computed
+  ``Preprocess`` so nothing is re-analyzed.  These are the bit-exact
+  oracles of the paper's algorithms.
+* ``"stream"`` — replays the plan's precomputed product stream
+  (``core.fast``, DESIGN.md §9): one vectorized gather → multiply →
+  segment-reduce pass, no per-column Python loop.  Canonical output order,
+  last-ulp fp-reassociation vs the oracles.  Default for ``expand`` (whose
+  naive executor computes the same contraction in the same order, slower);
+  opt-in for every other host method.
+
+Pallas backend: gathers each group's padded value operand with the plan's
+precomputed ``b_vgather``/``b_vmask`` (one fused masked gather per launch —
+no full padded-B intermediate, no per-call ``np.where`` mask allocation),
+launches one kernel per plan group via ``kernels.ops.run_{spa,spars,hash}``,
+and compacts each group's accumulator tile / hash tables straight into
+column-sliced CSC through ``sparse.format.CSCBuilder`` — the dense
+``[m, n]`` sink of the pre-plan backend no longer exists; peak transient
+memory is one ``[m, tile_cols]`` tile.
 
 ``execute_batched(plan, a_vals [B, nnz], b_vals [B, nnz])`` is the batched
 numeric phase (DESIGN.md §7): B same-pattern multiplies through *one* set of
 kernel launches (Pallas: each plan group launches once with a leading batch
-axis) or one vectorized numpy pass over the value axis (host SPA / expand,
-whose accumulation structure is pattern-only; the remaining host executors
-fall back to a per-element loop).  Results are bit-identical to a Python
-loop of ``execute``.
+axis) or one vectorized numpy pass over the value axis (the stream engine
+and host SPA; the remaining naive host executors fall back to a per-element
+loop).  Results are bit-identical to a Python loop of ``execute``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import naive
+from repro.core import fast, naive
 from repro.core.expand import spgemm_expand
 from repro.core.planner import SpgemmPlan
 from repro.sparse.format import (
@@ -39,27 +51,69 @@ from repro.sparse.format import (
 )
 from repro.sparse.partition import csc_empty, csc_hstack, merge_csc_partials
 
-# filled below: host methods whose batched path is vectorized over the value
-# axis (their accumulation structure is pattern-only); everything else loops
+# filled below: host methods whose *naive-engine* batched path is vectorized
+# over the value axis (accumulation structure is pattern-only); the stream
+# engine is always vectorized and every other naive executor loops
 _BATCHED_HOST: dict = {}
+
+ENGINES = (None, "naive", "stream")
+
+
+def resolve_engine(plan, engine: str | None) -> str:
+    """The engine an execution will run: explicit choice or the default.
+
+    ``None`` resolves to the method's default: ``"stream"`` for host
+    ``expand`` — the stream computes the same canonical contraction
+    (identical structure; values agree to ``np.add.reduceat``'s possible
+    within-segment re-association, see ``core.fast``) — and ``"naive"``
+    for every other method, so the oracle executors stay the bit-exact
+    reference.  ``"stream"`` is a host-backend engine; requesting it on a
+    Pallas plan raises.
+    """
+    _check_engine(plan, engine)
+    if plan.backend != "host":
+        return "naive"
+    if engine is None:
+        return "stream" if plan.method == "expand" else "naive"
+    return engine
+
+
+def _check_engine(plan, engine: str | None) -> None:
+    """Engine-argument validation shared by the untiled and tiled paths."""
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; one of None, 'naive', 'stream'")
+    if engine == "stream" and plan.backend != "host":
+        raise ValueError(
+            "engine='stream' is a host-backend engine (Pallas plans "
+            "run their own kernel schedule)")
 
 
 def execute(plan: SpgemmPlan, a_values, b_values, *,
             interpret: bool = True, stats: dict | None = None,
-            validate: str | None = None) -> CSC:
+            validate: str | None = None,
+            engine: str | None = None) -> CSC:
     """C = A @ B for new numeric values on the plan's sparsity patterns.
 
     ``a_values``/``b_values``: CSC matrices or raw nnz-length value arrays.
     Shapes and nnz are checked against the planned patterns (O(1)); a
     same-shape same-nnz operand with a different pattern is by default the
     caller's responsibility — pass ``validate="fingerprint"`` to re-hash the
-    operand structure (O(nnz)) and reject any pattern mismatch.  ``stats``,
-    if given, is filled with execution statistics (tile shapes, launch
-    count) — tests use it to assert the no-dense-intermediate guarantee.
+    operand structure (O(nnz)) and reject any pattern mismatch.  ``engine``
+    selects the host numeric engine (see :func:`resolve_engine`).
+    ``stats``, if given, is filled with execution statistics (engine, tile
+    shapes, launch count) — tests use it to assert the
+    no-dense-intermediate guarantee.
     """
     plan.a.check_compatible(a_values, validate)
     plan.b.check_compatible(b_values, validate)
+    eng = resolve_engine(plan, engine)
     if plan.backend == "host":
+        if eng == "stream":
+            return fast.execute_stream(plan, _values(a_values),
+                                       _values(b_values), stats=stats)
+        if stats is not None:
+            stats["engine"] = "naive"
         return _execute_host(plan, a_values, b_values)
     return _execute_pallas(plan, a_values, b_values, interpret=interpret,
                            stats=stats)
@@ -67,7 +121,8 @@ def execute(plan: SpgemmPlan, a_values, b_values, *,
 
 def execute_batched(plan: SpgemmPlan, a_values, b_values, *,
                     interpret: bool = True, stats: dict | None = None,
-                    validate: str | None = None) -> list:
+                    validate: str | None = None,
+                    engine: str | None = None) -> list:
     """B same-pattern multiplies through one execution of the plan.
 
     ``a_values``/``b_values``: :class:`~repro.sparse.format.BatchedCSC`
@@ -78,9 +133,10 @@ def execute_batched(plan: SpgemmPlan, a_values, b_values, *,
     Pallas backend: every plan group launches once for all B value sets (a
     vmapped leading batch axis), so the launch count is independent of B and
     peak transient memory is one ``[B, m, tile_cols]`` tile.  Host backend:
-    SPA and expand run one vectorized numpy pass over the value axis; the
-    lock-step executors (SPARS/HASH/hybrids/ESC) fall back to a per-element
-    loop (DESIGN.md §7).
+    the stream engine broadcasts its gather/segment-reduce pass over the
+    value axis, naive SPA runs one vectorized pass, and the remaining naive
+    executors (SPARS/HASH/hybrids/ESC) fall back to a per-element loop
+    (DESIGN.md §7/§9).
     """
     av = plan.a.batched_values(a_values, validate)
     bv = plan.b.batched_values(b_values, validate)
@@ -91,13 +147,22 @@ def execute_batched(plan: SpgemmPlan, a_values, b_values, *,
     batch = av.shape[0]
     if batch == 0:
         raise ValueError("empty batch")
+    eng = resolve_engine(plan, engine)
     if plan.backend == "host":
+        if eng == "stream":
+            # fast.py reports stats["path"]: "vectorized" (2-D passes) or
+            # "rowloop" (per-row 1-D passes on long streams)
+            out = fast.execute_stream_batched(plan, av, bv, stats=stats)
+            if stats is not None:
+                stats["batch"] = batch
+            return out
         vectorized = _BATCHED_HOST.get(plan.method)
         if vectorized is not None:
             out = vectorized(plan, av, bv)
         else:
             out = [_execute_host(plan, av[b], bv[b]) for b in range(batch)]
         if stats is not None:
+            stats["engine"] = "naive"
             stats["batch"] = batch
             stats["path"] = "vectorized" if vectorized is not None else "loop"
         return out
@@ -163,17 +228,21 @@ def _record_tile_stats(plan, stats, child_stats):
 
 def execute_tiled(plan, a_values, b_values, *, interpret: bool = True,
                   stats: dict | None = None,
-                  validate: str | None = None) -> CSC:
+                  validate: str | None = None,
+                  engine: str | None = None) -> CSC:
     """Numeric phase of a :class:`~repro.core.planner.TiledSpgemmPlan`.
 
     Runs every tile's child plan on the tile's value slices, accumulates
     row-block partials per column block (k-ascending; a single row block is
-    a bit-identical passthrough), and stitches the column blocks.  ``stats``
-    records the grid, the per-tile method choices, and — on the Pallas
-    backend — the aggregated launch count and peak transient tile size.
+    a bit-identical passthrough), and stitches the column blocks.
+    ``engine`` is forwarded to every child plan (``None``: per-method
+    defaults).  ``stats`` records the grid, the per-tile method choices,
+    and — on the Pallas backend — the aggregated launch count and peak
+    transient tile size.
     """
     plan.a.check_compatible(a_values, validate)
     plan.b.check_compatible(b_values, validate)
+    _check_engine(plan, engine)
     av = _values(a_values)[: int(plan.a.col_ptr[-1])]
     bv = _values(b_values)[: int(plan.b.col_ptr[-1])]
     dtype = _tiled_dtype(plan, av, bv)
@@ -184,7 +253,8 @@ def execute_tiled(plan, a_values, b_values, *, interpret: bool = True,
         cs = {} if (stats is not None
                     and plan.backend == "pallas") else None
         per_block[tile.n].append(
-            tile.plan.execute(ta, tb, interpret=interpret, stats=cs))
+            tile.plan.execute(ta, tb, interpret=interpret, stats=cs,
+                              engine=engine))
         if cs is not None:
             child_stats.append(cs)
     _record_tile_stats(plan, stats, child_stats)
@@ -194,7 +264,8 @@ def execute_tiled(plan, a_values, b_values, *, interpret: bool = True,
 def execute_tiled_batched(plan, a_values, b_values, *,
                           interpret: bool = True,
                           stats: dict | None = None,
-                          validate: str | None = None) -> list:
+                          validate: str | None = None,
+                          engine: str | None = None) -> list:
     """Batched tiled execution: B value sets through one plan traversal.
 
     Each tile's child plan executes batched (one launch set per tile,
@@ -211,6 +282,7 @@ def execute_tiled_batched(plan, a_values, b_values, *,
     batch = av.shape[0]
     if batch == 0:
         raise ValueError("empty batch")
+    _check_engine(plan, engine)
     dtype = _tiled_dtype(plan, av, bv)
     per_block = [{ni: [] for ni in range(plan.grid[1])}
                  for _ in range(batch)]
@@ -220,7 +292,7 @@ def execute_tiled_batched(plan, a_values, b_values, *,
         cs = {} if (stats is not None
                     and plan.backend == "pallas") else None
         outs = tile.plan.execute_batched(ta, tb, interpret=interpret,
-                                         stats=cs)
+                                         stats=cs, engine=engine)
         for bi, c in enumerate(outs):
             per_block[bi][tile.n].append(c)
         if cs is not None:
@@ -296,51 +368,10 @@ def _spa_host_batched(plan: SpgemmPlan, av: np.ndarray,
     return _assemble_batched(batch, out_rows, out_vals, (m, n), dtype)
 
 
-def _expand_host_batched(plan: SpgemmPlan, av: np.ndarray,
-                         bv: np.ndarray) -> list:
-    """Batched ``core.expand.spgemm_expand``: the product stream's positions
-    and the compress structure (sort order, duplicate groups, col_ptr) are
-    pattern-only and computed once; only the [B, n_products] value stream and
-    the per-group sums are per-element."""
-    a_cp = plan.a.col_ptr.astype(np.int64)
-    a_rows = plan.a.row_indices
-    b_cp = plan.b.col_ptr.astype(np.int64)
-    b_rows = plan.b.row_indices
-    m, n = plan.shape
-    batch = av.shape[0]
-
-    seg_starts = a_cp[b_rows]
-    seg_lens = (a_cp[b_rows + 1] - seg_starts).astype(np.int64)
-    total = int(seg_lens.sum())
-    if total == 0:
-        empty = CSC(np.zeros(0, av.dtype), np.zeros(0, np.int32),
-                    np.zeros(n + 1, np.int32), (m, n))
-        return [empty] * batch
-    stream_starts = np.concatenate(([0], np.cumsum(seg_lens)[:-1]))
-    apos = np.arange(total, dtype=np.int64) + np.repeat(
-        seg_starts - stream_starts, seg_lens)
-    rows = a_rows[apos].astype(np.int64)
-    cols = np.repeat(
-        np.repeat(np.arange(n, dtype=np.int64), np.diff(b_cp)), seg_lens)
-    vals = av[:, apos] * np.repeat(bv, seg_lens, axis=1)   # [B, total]
-
-    # compress exactly as csc_from_coo(sum_duplicates=True) does
-    order = np.lexsort((rows, cols))
-    rows, cols, vals = rows[order], cols[order], vals[:, order]
-    key = cols * m + rows
-    uniq, inv = np.unique(key, return_inverse=True)
-    acc = np.zeros((batch, len(uniq)), vals.dtype)
-    for b in range(batch):                 # np.add.at per row, same op order
-        np.add.at(acc[b], inv, vals[b])
-    u_cols = (uniq // m).astype(np.int64)
-    u_rows = (uniq % m).astype(np.int32)
-    col_ptr = np.zeros(n + 1, np.int32)
-    np.add.at(col_ptr[1:], u_cols, 1)
-    np.cumsum(col_ptr, out=col_ptr)
-    return [CSC(acc[b], u_rows, col_ptr, (m, n)) for b in range(batch)]
-
-
-_BATCHED_HOST.update(spa=_spa_host_batched, expand=_expand_host_batched)
+# the batched expand fast path lives in core/fast.py now: expand's default
+# engine is the product stream, whose batched execution is a broadcast of
+# the same gather/segment-reduce pass (no per-row np.add.at loop)
+_BATCHED_HOST.update(spa=_spa_host_batched)
 VECTORIZED_HOST = tuple(_BATCHED_HOST)
 
 
@@ -348,8 +379,7 @@ def _assemble_batched(batch, cols_rows, cols_vals, shape, dtype) -> list:
     """Batched ``naive._assemble``: per-column [B, cnt] value slabs."""
     n = shape[1]
     col_ptr = np.zeros(n + 1, np.int32)
-    for j in range(n):
-        col_ptr[j + 1] = col_ptr[j] + len(cols_rows[j])
+    np.cumsum([len(r) for r in cols_rows], out=col_ptr[1:])
     if col_ptr[-1]:
         rows = np.concatenate(cols_rows).astype(np.int32)
         vals = np.concatenate(cols_vals, axis=1)
@@ -372,13 +402,15 @@ def _execute_pallas(plan: SpgemmPlan, a_values, b_values, *,
     m, n = plan.shape
     av = padded_values(_values(a_values), lay.a_gather,
                        lay.a_mask).astype(np.float32, copy=False)
-    bv = padded_values(_values(b_values), lay.b_gather,
-                       lay.b_mask).astype(np.float32, copy=False)
+    b_raw = _values(b_values)
     a_arrs = kops.device_operand(lay.a_rows, av, lay.a_nnz)
 
     builder = CSCBuilder((m, n), np.float32)
     for g in lay.groups:
-        g_vals = np.where(g.valid[:, None], bv[g.sel], np.float32(0))
+        # plan-time-composed masked gather: straight from raw values to the
+        # group operand, no full padded-B intermediate or per-call mask
+        g_vals = padded_values(b_raw, g.b_vgather,
+                               g.b_vmask).astype(np.float32, copy=False)
         if g.kind == "spa":
             tile = kops.run_spa(g, a_arrs, g_vals, m=m,
                                 block_cols=lay.block_cols,
@@ -415,14 +447,13 @@ def _execute_pallas_batched(plan: SpgemmPlan, av: np.ndarray,
     batch = av.shape[0]
     avp = padded_values_batched(av, lay.a_gather,
                                 lay.a_mask).astype(np.float32, copy=False)
-    bvp = padded_values_batched(bv, lay.b_gather,
-                                lay.b_mask).astype(np.float32, copy=False)
     a_arrs = kops.device_operand(lay.a_rows, avp, lay.a_nnz)
 
     builder = BatchedCSCBuilder(batch, (m, n), np.float32)
     for g in lay.groups:
-        g_vals = np.where(g.valid[None, :, None], bvp[:, g.sel],
-                          np.float32(0))
+        g_vals = padded_values_batched(bv, g.b_vgather,
+                                       g.b_vmask).astype(np.float32,
+                                                         copy=False)
         if g.kind == "spa":
             tiles = kops.run_spa_batched(g, a_arrs, g_vals, m=m,
                                          block_cols=lay.block_cols,

@@ -15,6 +15,53 @@ import numpy as np
 from repro.sparse.format import CSC, COO, csc_from_coo, _np
 
 
+def product_count(a_col_ptr, b_col_ptr, b_row_indices) -> int:
+    """Number of scalar products of C = A @ B (pattern-only, O(nnz_b))."""
+    a_cp = np.asarray(a_col_ptr).astype(np.int64)
+    b_cp = np.asarray(b_col_ptr)
+    b_rows = np.asarray(b_row_indices)[: int(b_cp[-1])]
+    return int((a_cp[b_rows + 1] - a_cp[b_rows]).sum())
+
+
+def expand_positions(a_col_ptr, b_col_ptr, b_row_indices):
+    """Pattern-only Gustavson expansion: ``(a_pos, b_pos, cols)``.
+
+    One entry per scalar product of C = A @ B, in Gustavson stream order —
+    for each column j of B (in order), for each stored B[k,j] (in storage
+    order), for each stored A[i,k] (in storage order).  ``a_pos``/``b_pos``
+    index the operands' value arrays; ``cols`` is the product's C column.
+    The single source of this index arithmetic: :func:`expand_products`
+    (value-level COO) and the stream engine's
+    :func:`repro.core.fast.build_product_stream` both build on it, which is
+    what keeps their product orders — and hence summation orders — in
+    lock-step (DESIGN.md §9).
+    """
+    a_cp = np.asarray(a_col_ptr).astype(np.int64)
+    b_cp = np.asarray(b_col_ptr).astype(np.int64)
+    b_rows = np.asarray(b_row_indices)[: int(b_cp[-1])]
+    n = len(b_cp) - 1
+
+    # per stored B element: the A-column slice it multiplies
+    seg_starts = a_cp[b_rows]
+    seg_lens = a_cp[b_rows + 1] - seg_starts
+    total = int(seg_lens.sum())
+    if total == 0:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), z.copy()
+    # expanded A positions: for element e with slice [s_e, s_e+l_e), emit
+    # s_e, s_e+1, ..., s_e+l_e-1 (within-segment offset = global index minus
+    # the segment's start position in the stream)
+    stream_starts = np.concatenate(([0], np.cumsum(seg_lens)[:-1]))
+    a_pos = np.arange(total, dtype=np.int64) + np.repeat(
+        seg_starts - stream_starts, seg_lens
+    )
+    b_pos = np.repeat(np.arange(len(b_rows), dtype=np.int64), seg_lens)
+    cols = np.repeat(
+        np.repeat(np.arange(n, dtype=np.int64), np.diff(b_cp)), seg_lens
+    )
+    return a_pos, b_pos, cols
+
+
 def expand_products(a: CSC, b: CSC) -> COO:
     """All intermediate products as COO triples, in Gustavson column order.
 
@@ -23,37 +70,20 @@ def expand_products(a: CSC, b: CSC) -> COO:
     This is exactly the paper's per-column product sequence, so slicing the
     result by column gives the SPARS/HASH lane streams.
     """
-    a_cp = _np(a.col_ptr).astype(np.int64)
     a_rows = _np(a.row_indices)
     a_vals = _np(a.values)
-    b_cp = _np(b.col_ptr).astype(np.int64)
-    b_rows = _np(b.row_indices)[: b.nnz]
     b_vals = _np(b.values)[: b.nnz]
 
-    # per stored B element: the A-column slice it multiplies
-    seg_starts = a_cp[b_rows]
-    seg_lens = (a_cp[b_rows + 1] - seg_starts).astype(np.int64)
-    total = int(seg_lens.sum())
-    if total == 0:
+    a_pos, b_pos, cols = expand_positions(
+        _np(a.col_ptr), _np(b.col_ptr), _np(b.row_indices))
+    if len(a_pos) == 0:
         return COO(
             np.zeros(0, np.int32), np.zeros(0, np.int32),
             np.zeros(0, a_vals.dtype), (a.shape[0], b.shape[1]),
         )
-    # expanded A positions: for element e with slice [s_e, s_e+l_e), emit
-    # s_e, s_e+1, ..., s_e+l_e-1 (within-segment offset = global index minus
-    # the segment's start position in the stream)
-    stream_starts = np.concatenate(([0], np.cumsum(seg_lens)[:-1]))
-    apos = np.arange(total, dtype=np.int64) + np.repeat(
-        seg_starts - stream_starts, seg_lens
-    )
-
-    rows = a_rows[apos].astype(np.int32)
-    vals = a_vals[apos] * np.repeat(b_vals, seg_lens)
-    b_col_of_elem = np.repeat(
-        np.arange(b.shape[1], dtype=np.int32), np.diff(b_cp).astype(np.int64)
-    )
-    cols = np.repeat(b_col_of_elem, seg_lens)
-    return COO(rows, cols, vals, (a.shape[0], b.shape[1]))
+    rows = a_rows[a_pos].astype(np.int32)
+    vals = a_vals[a_pos] * b_vals[b_pos]
+    return COO(rows, cols.astype(np.int32), vals, (a.shape[0], b.shape[1]))
 
 
 def product_col_ptr(a: CSC, b: CSC) -> np.ndarray:

@@ -25,8 +25,7 @@ def _assemble(cols_rows, cols_vals, shape, dtype) -> CSC:
     """Build CSC from per-column (rows, vals) lists in original column order."""
     n = shape[1]
     col_ptr = np.zeros(n + 1, np.int32)
-    for j in range(n):
-        col_ptr[j + 1] = col_ptr[j] + len(cols_rows[j])
+    np.cumsum([len(r) for r in cols_rows], out=col_ptr[1:])
     rows = (
         np.concatenate(cols_rows)
         if col_ptr[-1]

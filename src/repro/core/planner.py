@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core.analysis import Preprocess, preprocess
 from repro.core.cost import AUTO_CANDIDATES, CostConstants, choose_method
+import repro.core.fast as _fast
+from repro.core.fast import ProductStream, build_product_stream
 from repro.sparse.format import BatchedCSC, CSC, _np, csc_pad_gather
 from repro.sparse.partition import (
     auto_tile_grid,
@@ -214,19 +216,25 @@ class KernelGroup:
     """One kernel launch of the Pallas execution schedule.
 
     ``cols`` are the original B/C column ids this launch computes, in lane
-    order; ``sel``/``valid`` select-and-pad those columns out of the full
-    padded B layout (pad lanes point at column 0 with nnz forced to 0).
+    order (pad lanes point at column 0 with nnz forced to 0).
     ``b_rows``/``b_nnz``/``steps`` are the pattern-static halves of the
     padded group operand, stored as device arrays so re-executions pay no
     host-to-device copy; only values are re-gathered per execution.
+    ``b_vgather``/``b_vmask`` are that gather, fully precomputed: the
+    group's padded value operand is ``where(b_vmask, values[b_vgather], 0)``
+    — one fused gather from the raw B value array per launch, composed at
+    plan time from the padded layout's gather and the lane-validity mask
+    (executions no longer allocate a full padded B nor a per-group
+    ``np.where`` mask; the lane selection itself is baked in, so the plan
+    retains no separate sel/valid arrays).
     """
 
     kind: str                 # "spa" | "spars" | "hash"
     cols: np.ndarray          # [n_real] original column ids
-    sel: np.ndarray           # [n_pad] gather index into the B layout
-    valid: np.ndarray         # [n_pad] bool, False for pad lanes
     b_rows: jnp.ndarray       # [n_pad, zb] int32 (device)
     b_nnz: jnp.ndarray        # [n_pad] int32 (device)
+    b_vgather: np.ndarray     # [n_pad, zb] int64 into B's raw values
+    b_vmask: np.ndarray       # [n_pad, zb] bool, False for pad slots/lanes
     steps: Optional[jnp.ndarray] = None  # [n_pad/block_cols] trip counts
     h: Optional[int] = None              # hash-table size (kind == "hash")
 
@@ -250,8 +258,6 @@ class PallasLayout:
     a_nnz: jnp.ndarray        # [n_a] int32 (device)
     a_gather: np.ndarray
     a_mask: np.ndarray
-    b_gather: np.ndarray
-    b_mask: np.ndarray
     groups: Tuple[KernelGroup, ...]
 
 
@@ -271,6 +277,38 @@ class SpgemmPlan:
     b: Pattern
     pre: Optional[Preprocess]          # host blocking analysis (if any)
     pallas: Optional[PallasLayout]     # kernel layouts (pallas backend)
+    stream_limit: Optional[int] = None  # plan-memory guard (products)
+    _stream_memo: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    @property
+    def stream(self) -> Optional[ProductStream]:
+        """Lazily-built product stream (``engine="stream"``, DESIGN.md §9).
+
+        Built on first access so plans that never run the stream engine pay
+        neither the plan-time lexsort nor the O(flops) resident memory;
+        memoized on the plan, so tiled child plans shared through the LRU
+        share one stream.  ``None`` on Pallas plans and when the stream
+        would exceed ``stream_limit`` (the guard resolved at plan time) —
+        stream executions then rebuild transiently.
+        """
+        if self.backend != "host":
+            return None
+        if "stream" not in self._stream_memo:
+            self._stream_memo["stream"] = build_product_stream(
+                self.a, self.b, self.stream_limit)
+        return self._stream_memo["stream"]
+
+    @property
+    def stream_nbytes(self) -> int:
+        """Bytes of stream index data currently held by this plan.
+
+        Reads the memo without triggering the lazy build (0 until the
+        first stream execution, and 0 when the guard tripped) — this is
+        what ``plan_cache_info()['stream_bytes']`` aggregates.
+        """
+        s = self._stream_memo.get("stream")
+        return s.nbytes if s is not None else 0
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -278,32 +316,42 @@ class SpgemmPlan:
 
     @property
     def cache_key(self) -> tuple:
+        # mirrors core.api._cached_plan's LRU key (which keys host plans on
+        # the stream guard in effect at build time)
         return (self.a.fingerprint, self.b.fingerprint, self.method,
-                self.backend, self.params)
+                self.backend, self.params, self.stream_limit)
 
     def execute(self, a_values, b_values, *, interpret: bool = True,
-                stats: dict | None = None,
-                validate: str | None = None) -> CSC:
-        """Numeric phase only: C for new values on the planned patterns."""
+                stats: dict | None = None, validate: str | None = None,
+                engine: str | None = None) -> CSC:
+        """Numeric phase only: C for new values on the planned patterns.
+
+        ``engine`` selects the host numeric engine: ``"naive"`` (the
+        faithful per-method oracle executors), ``"stream"`` (the vectorized
+        product-stream engine, DESIGN.md §9), or ``None`` for the method's
+        default (``"stream"`` for ``expand``, ``"naive"`` otherwise).
+        """
         from repro.core.executor import execute
 
         return execute(self, a_values, b_values, interpret=interpret,
-                       stats=stats, validate=validate)
+                       stats=stats, validate=validate, engine=engine)
 
     def execute_batched(self, a_values, b_values, *, interpret: bool = True,
                         stats: dict | None = None,
-                        validate: str | None = None) -> list:
+                        validate: str | None = None,
+                        engine: str | None = None) -> list:
         """Batched numeric phase: B same-pattern multiplies, one schedule.
 
         ``a_values``/``b_values``: :class:`~repro.sparse.format.BatchedCSC`
         operands or raw ``[B, nnz]`` value stacks aligned with the planned
         patterns.  Returns the B results as a list of CSC matrices,
         bit-identical to a Python loop of :meth:`execute` (DESIGN.md §7).
+        ``engine`` — as in :meth:`execute`.
         """
         from repro.core.executor import execute_batched
 
         return execute_batched(self, a_values, b_values, interpret=interpret,
-                               stats=stats, validate=validate)
+                               stats=stats, validate=validate, engine=engine)
 
 
 def _freeze(params: dict) -> tuple:
@@ -321,6 +369,7 @@ def plan_spgemm(
     b_max: int | None = None,
     block_cols: int = 128,
     tile_cols: int | None = None,
+    stream_limit: int | None = None,
 ) -> SpgemmPlan:
     """Build the symbolic plan for C = A @ B (pattern-dependent work only).
 
@@ -329,6 +378,13 @@ def plan_spgemm(
     ``block_cols``), which caps the transient accumulator tile at
     ``[m, tile_cols]`` — the dense ``[m, n]`` sink of the pre-plan backend is
     gone.
+
+    Host plans also carry the product stream (``engine="stream"``, DESIGN.md
+    §9), built lazily on first stream access and kept plan-resident while
+    the flop count is within ``stream_limit`` (default: the value of
+    ``fast.STREAM_MAX_PRODUCTS`` at plan time); above it ``plan.stream`` is
+    ``None`` and stream executions rebuild it transiently — same results,
+    no plan-resident O(flops) memory.
     """
     if a.n_cols != b.n_rows:
         raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
@@ -348,8 +404,12 @@ def plan_spgemm(
         elif method.startswith("h-"):
             pre = preprocess(a, b, t=params["t"], b_min=params["b_min"],
                              b_max=params["b_max"])
+        # resolve the guard now (it is a mutable module knob) so the plan's
+        # lazy stream build is deterministic no matter when it happens
+        limit = (_fast.STREAM_MAX_PRODUCTS if stream_limit is None
+                 else int(stream_limit))
         return SpgemmPlan(method, "host", _freeze(params), a_pat, b_pat,
-                          pre, None)
+                          pre, None, limit)
     if backend != "pallas":
         raise ValueError(f"unknown backend {backend!r}")
     if method in HOST_ONLY:
@@ -428,30 +488,50 @@ class TiledSpgemmPlan:
         return {(t.k, t.n): t.method for t in self.tiles}
 
     @property
+    def stream_nbytes(self) -> int:
+        """Stream bytes currently held via this plan's child tile plans.
+
+        Children of identical pattern share one plan (and one stream), so
+        the sum is over *distinct* child plans.  Note the per-plan guard
+        bounds each tile's stream individually — a tiled plan over a huge
+        multiply can hold many guard-sized tile streams at once.
+        """
+        seen = {id(t.plan): t.plan.stream_nbytes for t in self.tiles}
+        return sum(seen.values())
+
+    @property
     def cache_key(self) -> tuple:
-        # mirrors core.api._cached_tiled_plan's LRU key exactly
+        # mirrors core.api._cached_tiled_plan's LRU key: the stream guard
+        # in effect at build time is part of it, because the guard steers
+        # the per-tile method choices
         own = dict(self.params)
         return (self.a.fingerprint, self.b.fingerprint, "auto",
-                self.backend, own["tile"], own["candidates"])
+                self.backend, own["tile"], own["candidates"],
+                own["stream_guard"])
 
     def execute(self, a_values, b_values, *, interpret: bool = True,
-                stats: dict | None = None,
-                validate: str | None = None) -> CSC:
-        """Numeric phase: run every tile plan, merge row blocks, stitch."""
+                stats: dict | None = None, validate: str | None = None,
+                engine: str | None = None) -> CSC:
+        """Numeric phase: run every tile plan, merge row blocks, stitch.
+
+        ``engine`` is forwarded to every child tile plan (``None`` lets each
+        tile use its method's default engine).
+        """
         from repro.core.executor import execute_tiled
 
         return execute_tiled(self, a_values, b_values, interpret=interpret,
-                             stats=stats, validate=validate)
+                             stats=stats, validate=validate, engine=engine)
 
     def execute_batched(self, a_values, b_values, *, interpret: bool = True,
                         stats: dict | None = None,
-                        validate: str | None = None) -> list:
+                        validate: str | None = None,
+                        engine: str | None = None) -> list:
         """Batched numeric phase over ``[B, nnz]`` value stacks."""
         from repro.core.executor import execute_tiled_batched
 
         return execute_tiled_batched(self, a_values, b_values,
                                      interpret=interpret, stats=stats,
-                                     validate=validate)
+                                     validate=validate, engine=engine)
 
 
 def normalize_tile_spec(tile) -> tuple:
@@ -555,6 +635,10 @@ def plan_spgemm_tiled(
                 plan=_tile_plan(a_tile, b_tile, method)))
 
     params = (("candidates", cands),
+              # host-only: the guard steers per-tile method choices there;
+              # None on pallas so knob changes don't distinguish its plans
+              ("stream_guard",
+               _fast.STREAM_MAX_PRODUCTS if backend == "host" else None),
               ("tile", (k_width, n_width)))
     return TiledSpgemmPlan(backend, Pattern.of(a), Pattern.of(b),
                            np.asarray(k_bounds, np.int64),
@@ -593,13 +677,18 @@ def _plan_pallas(a, b, method, params, block_cols, tile_cols):
         valid[:n_real] = True
         g_rows = np.where(valid[:, None], b_rows[sel], 0).astype(np.int32)
         g_nnz = np.where(valid, b_nnz[sel], 0).astype(np.int32)
+        # the masked value-gather selection, composed once at plan time:
+        # executions do where(vmask, values[vgather], 0) per group instead
+        # of padding all of B and re-masking on every call
+        vgather = b_gather[sel]
+        vmask = b_mask[sel] & valid[:, None]
         if steps is not None:
             steps = np.asarray(steps, np.int32)
             assert len(steps) == n_pad // block_cols, (len(steps), n_pad)
             steps = jnp.asarray(steps)
-        groups.append(KernelGroup(kind, cols, sel, valid,
+        groups.append(KernelGroup(kind, cols,
                                   jnp.asarray(g_rows), jnp.asarray(g_nnz),
-                                  steps, h))
+                                  vgather, vmask, steps, h))
 
     # the kernels process each lane independently, so splitting a family into
     # tile_cols-wide launches changes peak memory, never values
@@ -653,8 +742,6 @@ def _plan_pallas(a, b, method, params, block_cols, tile_cols):
         a_nnz=jnp.asarray(a_nnz),
         a_gather=a_gather,
         a_mask=a_mask,
-        b_gather=b_gather,
-        b_mask=b_mask,
         groups=tuple(groups),
     )
     return pre, layout

@@ -375,6 +375,24 @@ def padded_values_batched(values, gather, mask):
     return np.where(mask[None], v[:, gather], 0).astype(v.dtype, copy=False)
 
 
+def segment_reduce(values, seg_starts, axis: int = -1):
+    """Per-segment sums along ``axis``: segment ``i`` spans
+    ``[seg_starts[i], seg_starts[i+1])`` (last segment runs to the end).
+
+    A thin wrapper over ``np.add.reduceat`` that handles the empty-segment-
+    list edge case (reduceat rejects empty index arrays).  The 2-D
+    ``axis=1`` form is bit-identical per row to the 1-D reduction, which is
+    what lets the batched stream engine promise batched == looped
+    (DESIGN.md §9).
+    """
+    v = np.asarray(values)
+    if len(seg_starts) == 0:
+        shape = list(v.shape)
+        shape[axis] = 0
+        return np.zeros(shape, v.dtype)
+    return np.add.reduceat(v, seg_starts, axis=axis)
+
+
 def csc_to_padded_columns(m: CSC, pad_to: int | None = None):
     """Ragged→rectangular view for lock-step kernels.
 

@@ -249,10 +249,36 @@ def _sparse_tile_stats():
     return tile_stats(a, b)
 
 
+def _guard_tripped_tile_stats():
+    """A tile whose product stream exceeds the plan-memory guard: flops =
+    nnz_b * m > fast.STREAM_MAX_PRODUCTS (pattern built directly — values
+    are never read by the cost model)."""
+    import repro.core.fast as fast
+
+    k, nb, per = 64, 8, 32
+    m = fast.STREAM_MAX_PRODUCTS // (nb * per) + 1
+    a = CSC(np.zeros(0), np.tile(np.arange(m, dtype=np.int32), k),
+            np.arange(k + 1, dtype=np.int32) * m, (m, k))
+    rng = np.random.default_rng(29)
+    b_rows = np.concatenate(
+        [np.sort(rng.choice(k, size=per, replace=False)) for _ in range(nb)])
+    b = CSC(np.zeros(0), b_rows.astype(np.int32),
+            np.arange(nb + 1, dtype=np.int32) * per, (k, nb))
+    return tile_stats(a, b)
+
+
 def test_cost_model_host_regimes():
-    # flop-heavy few-column tiles -> SPA; many sparse columns -> expand
-    assert choose_method(_dense_tile_stats(), "host") == "spa"
+    # while the product stream fits the plan-memory guard the stream engine
+    # (method "expand") dominates every host tile profile (DESIGN.md §9)...
+    assert choose_method(_dense_tile_stats(), "host") == "expand"
     assert choose_method(_sparse_tile_stats(), "host") == "expand"
+    # ...above the guard, executions pay a per-call transient stream rebuild
+    # and SPA wins back flop-heavy tiles
+    import repro.core.fast as fast
+
+    st = _guard_tripped_tile_stats()
+    assert st.flops > fast.STREAM_MAX_PRODUCTS
+    assert choose_method(st, "host") == "spa"
 
 
 def test_cost_model_pallas_regimes():
