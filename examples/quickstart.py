@@ -128,6 +128,38 @@ def auto_method_demo():
         fast.STREAM_MAX_PRODUCTS = old_guard
 
 
+def jax_stream_demo():
+    """backend="jax" (DESIGN.md §10): the plan's product stream as a
+    jitted, differentiable device function — SpGEMM inside jax.jit/grad."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import plan_spgemm
+
+    a = random_uniform_csc(256, 6, seed=3)
+    vals = np.asarray(a.values).astype(np.float32)
+    plan = plan_spgemm(a, a, "expand", backend="jax")
+    t0 = time.perf_counter()
+    plan.execute(vals, vals).values.block_until_ready()
+    t_warm = time.perf_counter() - t0          # plan + device stream + trace
+    t0 = time.perf_counter()
+    plan.execute(vals, vals).values.block_until_ready()
+    t_steady = time.perf_counter() - t0        # cached-trace replay
+
+    # gradients w.r.t. both operands' values are stream replays too
+    loss = lambda x, y: jnp.sum(plan.stream_apply(x, y))
+    ga, gb = jax.grad(loss, argnums=(0, 1))(jnp.asarray(vals),
+                                            jnp.asarray(vals))
+    print(f"\n=== backend='jax' (A 256x256, jitted device stream) ===")
+    print(f"warmup (plan+trace):      {t_warm*1e3:7.2f}ms  (once)")
+    print(f"steady state (/call):     {t_steady*1e3:7.2f}ms  "
+          f"— one compiled dispatch, no per-group launches")
+    print(f"grad(sum C) shapes:       dA {tuple(ga.shape)}, "
+          f"dB {tuple(gb.shape)} — SpGEMM is differentiable in-trace")
+
+
 def main():
     for z, label in ((2, "very sparse (Z=2 nnz/col)"),
                      (10, "denser (Z=10 nnz/col)")):
@@ -152,6 +184,7 @@ def main():
           "see EXPERIMENTS.md)")
     plan_reuse_demo()
     auto_method_demo()
+    jax_stream_demo()
 
 
 if __name__ == "__main__":

@@ -38,12 +38,18 @@ from repro.core.planner import (
 # re-exported by value — read/set it on repro.core.fast so changes take
 # effect (planner/cost read it live)
 from repro.core.fast import ProductStream, build_product_stream
+# NOTE: backends.register_backend stays module-private — registering a
+# contract alone does not wire executors/candidates, so it is not a public
+# extension point (see core/backends.py)
+from repro.core.backends import ExecutionContract, backend_names, get_backend
+from repro.core.jax_stream import DeviceStream, device_stream, stream_fn
 from repro.core.executor import execute as execute_plan
 from repro.core.executor import execute_batched as execute_plan_batched
 from repro.core.executor import execute_tiled, execute_tiled_batched
 from repro.core.executor import resolve_engine
 from repro.core.api import (
     ALGORITHMS,
+    cached_plan,
     plan_cache_clear,
     plan_cache_info,
     plan_cache_resize,
@@ -83,7 +89,14 @@ __all__ = [
     "execute_tiled_batched",
     "ProductStream",
     "build_product_stream",
+    "ExecutionContract",
+    "backend_names",
+    "get_backend",
+    "DeviceStream",
+    "device_stream",
+    "stream_fn",
     "resolve_engine",
+    "cached_plan",
     "plan_cache_clear",
     "plan_cache_info",
     "plan_cache_resize",

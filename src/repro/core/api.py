@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 
+from repro.core import backends
 import repro.core.fast as _fast
 from repro.core.cost import AUTO_CANDIDATES
 from repro.core.planner import (
@@ -60,23 +61,29 @@ def plan_cache_clear() -> None:
 def plan_cache_info() -> dict:
     """Current cache occupancy, hit/miss counters, and hit rate.
 
-    ``stream_bytes`` totals the product-stream index data materialized by
-    cached host plans, including streams held through tiled plans' child
-    tile plans (each counted once even when shared) — see DESIGN.md §9.
-    The guard bounds each *plan's* stream; the LRU bounds entries, but a
-    tiled plan holds one guard-sized stream per distinct tile pattern, so
-    watch this number (and shrink via ``plan_cache_resize`` or a lower
-    guard) when caching large tiled workloads.
+    ``stream_bytes`` totals the *host* product-stream index data
+    materialized by cached plans, including streams held through tiled
+    plans' child tile plans (each counted once even when shared) — see
+    DESIGN.md §9.  ``device_stream_bytes`` separately totals the
+    device-resident index arrays jax-backend plans cache alongside the host
+    ones (DESIGN.md §10).  The guard bounds each *plan's* stream; the LRU
+    bounds entries, but a tiled plan holds one guard-sized stream per
+    distinct tile pattern, so watch these numbers (and shrink via
+    ``plan_cache_resize`` or a lower guard) when caching large tiled
+    workloads.
     """
     lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
-    seen: dict = {}
+    host_seen: dict = {}
+    dev_seen: dict = {}
     for p in _PLAN_CACHE.values():
         for sp in [t.plan for t in getattr(p, "tiles", ())] or [p]:
-            seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
+            host_seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
+            dev_seen[id(sp)] = getattr(sp, "device_stream_nbytes", 0)
     return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
                 max_size=PLAN_CACHE_SIZE,
                 hit_rate=_CACHE_STATS["hits"] / lookups if lookups else 0.0,
-                stream_bytes=sum(seen.values()))
+                stream_bytes=sum(host_seen.values()),
+                device_stream_bytes=sum(dev_seen.values()))
 
 
 def plan_cache_resize(n: int) -> dict:
@@ -114,21 +121,63 @@ def _cache_put(key, plan):
 
 
 def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
-                 params: dict) -> SpgemmPlan:
-    # for host plans the stream guard is part of the key: plans resolve it
-    # at build time, so changing fast.STREAM_MAX_PRODUCTS must not hand
-    # back plans built under the old budget.  Pallas plans carry no stream
-    # (stream_limit=None), so the knob must not invalidate them.
+                 params: dict,
+                 stream_limit: int | None = None) -> SpgemmPlan:
+    # for stream-capable plans (host, jax) the stream guard is part of the
+    # key: plans resolve it at build time, so changing
+    # fast.STREAM_MAX_PRODUCTS must not hand back plans built under the old
+    # budget (an explicit per-plan stream_limit= keys on its own value).
+    # Pallas plans carry no stream (stream_limit=None), so the knob must
+    # not invalidate them.
+    contract = backends.get_backend(backend)
+    if contract.canonical_method:
+        # method spellings collapse on such backends (jax: one stream
+        # contraction) — key on the canonical form so they share one entry
+        method = contract.canonical_method
+        params = resolve_params(method)
+    if not contract.carries_stream:
+        limit = None
+    elif stream_limit is not None:
+        limit = int(stream_limit)
+    else:
+        limit = _fast.STREAM_MAX_PRODUCTS
     key = (pattern_fingerprint(a), pattern_fingerprint(b), method, backend,
-           tuple(sorted(params.items())),
-           _fast.STREAM_MAX_PRODUCTS if backend == "host" else None)
+           tuple(sorted(params.items())), limit)
     plan = _cache_get(key)
     if plan is None:
         plan = plan_spgemm(a, b, method, backend=backend,
                            t=params.get("t"), b_min=params.get("b_min"),
-                           b_max=params.get("b_max"))
+                           b_max=params.get("b_max"),
+                           stream_limit=stream_limit)
         _cache_put(key, plan)
     return plan
+
+
+def cached_plan(a: CSC, b: CSC, method: str | None = None, *,
+                backend: str | None = None, t: float | None = None,
+                b_min: int | None = None, b_max: int | None = None,
+                stream_limit: int | None = None) -> SpgemmPlan:
+    """Fetch-or-build a plan through the shared LRU (public accessor).
+
+    The plan-holding companion of :func:`spgemm`: out-of-package callers
+    (model layers, serving) that want to hold a plan *and* share it with
+    the api's cache use this instead of reaching for the private LRU
+    internals.  Arguments and defaults mirror :func:`spgemm`
+    (``method="auto"`` has its own tiled entry point,
+    :func:`~repro.core.planner.plan_spgemm_tiled`); ``stream_limit``
+    overrides the plan-memory guard for this plan only (part of the cache
+    key), without mutating the global ``fast.STREAM_MAX_PRODUCTS`` knob.
+    """
+    method, backend = _resolve_method_backend(method, backend)
+    if method == "auto":
+        raise ValueError(
+            "cached_plan builds single-method plans; use plan_spgemm_tiled "
+            "for method='auto'")
+    _check_canonical_only(backend, t, b_min, b_max)
+    return _cached_plan(a, b, method, backend,
+                        resolve_params(method, t=t, b_min=b_min,
+                                       b_max=b_max),
+                        stream_limit=stream_limit)
 
 
 def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,
@@ -140,7 +189,8 @@ def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,
         else tuple(candidates)
     key = (pattern_fingerprint(a), pattern_fingerprint(b), "auto", backend,
            spec, cands,
-           _fast.STREAM_MAX_PRODUCTS if backend == "host" else None)
+           _fast.STREAM_MAX_PRODUCTS
+           if backends.get_backend(backend).carries_stream else None)
     plan = _cache_get(key)
     if plan is None:
         plan = plan_spgemm_tiled(a, b, backend=backend, tile=tile,
@@ -186,8 +236,7 @@ def _resolve_method_backend(method, backend):
     if method != "auto" and method not in ALGORITHMS:
         raise ValueError(
             f"unknown method {method!r}; one of {list(ALGORITHMS)} or 'auto'")
-    if backend not in ("host", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
+    backends.get_backend(backend)   # canonical unknown-backend error
     return method, backend
 
 
@@ -202,6 +251,11 @@ def _check_auto_only(method, t, b_min, b_max, tile, candidates):
         raise ValueError(
             "t/b_min/b_max do not apply to method='auto' (per-tile methods "
             "use their own defaults; restrict candidates= instead)")
+
+
+def _check_canonical_only(backend, t, b_min, b_max):
+    backends.check_method_knobs(backends.get_backend(backend),
+                                t, b_min, b_max)
 
 
 def spgemm(
@@ -248,6 +302,7 @@ def spgemm(
         return plan.execute(a, b, validate=validate, engine=engine)
     method, backend = _resolve_method_backend(method, backend)
     _check_auto_only(method, t, b_min, b_max, tile, candidates)
+    _check_canonical_only(backend, t, b_min, b_max)
     if method == "auto":
         if cache:
             p = _cached_tiled_plan(a, b, backend, tile, candidates)
@@ -259,8 +314,8 @@ def spgemm(
     if cache:
         p = _cached_plan(a, b, method, backend, params)
     else:
-        p = plan_spgemm(a, b, method, backend=backend, t=params.get("t"),
-                        b_min=params.get("b_min"), b_max=params.get("b_max"))
+        p = plan_spgemm(a, b, method, backend=backend, t=t,
+                        b_min=b_min, b_max=b_max)
     return p.execute(a, b, validate=validate, engine=engine)
 
 
@@ -309,6 +364,7 @@ def spgemm_batched(
         raise ValueError("empty batch")
     method, backend = _resolve_method_backend(method, backend)
     _check_auto_only(method, t, b_min, b_max, tile, candidates)
+    _check_canonical_only(backend, t, b_min, b_max)
     a0, b0 = a.element(0), b.element(0)
     if method == "auto":
         if cache:
@@ -321,6 +377,6 @@ def spgemm_batched(
     if cache:
         p = _cached_plan(a0, b0, method, backend, params)
     else:
-        p = plan_spgemm(a0, b0, method, backend=backend, t=params.get("t"),
-                        b_min=params.get("b_min"), b_max=params.get("b_max"))
+        p = plan_spgemm(a0, b0, method, backend=backend, t=t,
+                        b_min=b_min, b_max=b_max)
     return p.execute_batched(a, b, validate=validate, engine=engine)

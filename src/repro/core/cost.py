@@ -38,18 +38,25 @@ import math
 
 import numpy as np
 
+from repro.core import backends
 import repro.core.fast as _fast
 from repro.sparse.stats import TileStats
 
-# default per-backend candidate sets for method="auto".  Host: the two
-# engines with complementary regimes (expand -> the plan-resident product
-# stream, cheapest per product while the stream fits the memory guard;
-# SPA: no plan-resident O(flops) state, wins guard-tripped flop-heavy
-# tiles).  Pallas: the paper's families — dense-tile SPA vs small-table
-# HASH, with SPARS between.
+# default per-backend candidate sets for method="auto" (one entry per
+# registered backend contract — core/backends.py).  Host: the engines with
+# complementary regimes (expand -> the plan-resident product stream,
+# cheapest per product while the stream fits the memory guard; SPA: no
+# plan-resident O(flops) state, wins guard-tripped flop-heavy tiles; "jax"
+# -> the device-resident stream of DESIGN.md §10, picked for in-guard
+# tiles wherever the calibrated device per-product cost undercuts the
+# numpy stream — on accelerator-backed installs, not the CI CPU, see
+# CostConstants.jax_prod).  Pallas: the paper's families — dense-tile SPA
+# vs small-table HASH, with SPARS between.  Jax: the device stream is the
+# backend's one engine.
 AUTO_CANDIDATES = {
-    "host": ("spa", "expand"),
+    "host": ("spa", "expand", "jax"),
     "pallas": ("spa", "spars-40/40", "hash-256/256"),
+    "jax": ("jax",),
 }
 
 
@@ -74,6 +81,15 @@ class CostConstants:
     expand_base: float = 1.0e-4
     expand_prod: float = 1.5e-7
     expand_sort: float = 8.0e-9       # per product per log2(products)
+    # jax device stream (core/jax_stream.py): fixed jitted-dispatch
+    # overhead + flat per-product device cost (cached-trace steady state;
+    # measured by ``benchmarks/tiled.py --calibrate``).  On the CI
+    # container class XLA *CPU* scatter-add dominates (segment_sum is
+    # near-serial there), so the honest per-product constant is above the
+    # numpy stream's and host auto only picks "jax" after re-calibration
+    # on hardware where the scatter is parallel (real devices)
+    jax_base: float = 1.4e-5
+    jax_prod: float = 3.7e-8
     # host esc_numpy: expand + explicit LSD radix rounds
     esc_base: float = 2.0e-4
     esc_round: float = 1.2e-7         # per product per radix round
@@ -91,7 +107,7 @@ DEFAULT_CONSTANTS = CostConstants()
 
 
 def _family(method: str) -> str:
-    if method in ("spa", "expand", "esc"):
+    if method in ("spa", "expand", "esc", "jax"):
         return method
     if method.startswith("h-"):
         return "hybrid"
@@ -125,6 +141,13 @@ def _next_pow2(x: int) -> int:
     return 1 << max(int(math.ceil(math.log2(max(x, 2)))), 1)
 
 
+def _guarded_rebuild_cost(flops: int, c: CostConstants) -> float:
+    """Per-call transient stream rebuild (expansion + lexsort): what any
+    stream engine costs above the plan-memory guard."""
+    return c.expand_base + flops * (
+        c.expand_prod + c.expand_sort * math.log2(max(flops, 2)))
+
+
 def _host_cost(stats: TileStats, method: str, c: CostConstants) -> float:
     fam = _family(method)
     flops = stats.flops
@@ -136,8 +159,14 @@ def _host_cost(stats: TileStats, method: str, c: CostConstants) -> float:
             # plan-resident product stream: flat vectorized replay
             return c.stream_base + c.stream_prod * flops
         # guard-tripped: every call rebuilds the stream transiently
-        return c.expand_base + flops * (
-            c.expand_prod + c.expand_sort * math.log2(max(flops, 2)))
+        return _guarded_rebuild_cost(flops, c)
+    if fam == "jax":
+        if flops <= _fast.STREAM_MAX_PRODUCTS:
+            # jitted device stream: one dispatch, flat per-product cost
+            return c.jax_base + c.jax_prod * flops
+        # guard-tripped jax plans fall back to the host transient rebuild
+        # (core/jax_stream.py), so they cost what guarded expand costs
+        return _guarded_rebuild_cost(flops, c)
     if fam == "esc":
         rounds = (math.ceil(math.log2(max(stats.m, 2)) / 5)
                   + math.ceil(math.log2(max(stats.n, 2)) / 5))
@@ -160,7 +189,7 @@ def _host_cost(stats: TileStats, method: str, c: CostConstants) -> float:
 def _pallas_cost(stats: TileStats, method: str, c: CostConstants) -> float:
     fam = _family(method)
     m = max(stats.m, 1)
-    if fam in ("expand", "esc"):
+    if fam in ("expand", "esc", "jax"):
         raise ValueError(f"method {method!r} has no Pallas kernel family")
     if fam == "spa":
         return c.p_spa_entry * m * stats.nnz_b + c.p_spa_col * m * stats.n
@@ -187,15 +216,18 @@ def estimate_cost(stats: TileStats, method: str, backend: str = "host",
                   constants: CostConstants | None = None) -> float:
     """Predicted cost of running ``method`` on one tile (lower is better).
 
-    Host estimates are in seconds; Pallas estimates are relative work units.
-    Only compare estimates within one backend.
+    The model is selected by the backend's registered contract
+    (``core.backends``): host and jax estimates are wall seconds (the
+    "jax" family models the device stream's dispatch + per-product cost,
+    so it is directly comparable with the host engines it competes with in
+    a mixed tile grid); Pallas estimates are relative work units.  Only
+    compare estimates within one cost domain.
     """
     c = constants or DEFAULT_CONSTANTS
-    if backend == "host":
-        return _host_cost(stats, method, c)
-    if backend == "pallas":
+    contract = backends.get_backend(backend)
+    if contract.cost_domain == "relative":
         return _pallas_cost(stats, method, c)
-    raise ValueError(f"unknown backend {backend!r}")
+    return _host_cost(stats, method, c)
 
 
 def choose_method(stats: TileStats, backend: str = "host",

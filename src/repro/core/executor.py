@@ -1,45 +1,47 @@
-"""Numeric SpGEMM execution of a cached symbolic plan (DESIGN.md §6–§9).
+"""Numeric SpGEMM execution of a cached symbolic plan (DESIGN.md §6–§10).
 
 ``execute(plan, a_values, b_values)`` runs only the value-dependent work of
 C = A @ B; every pattern-dependent decision (sorting, blocking, hash sizing,
 padded layouts, kernel groups, the product stream) was made once by
 ``core.planner.plan_spgemm``.
 
-Host backend — two engines, selected by ``engine=``:
+Execution is dispatched through the backend/engine registry
+(``core.backends``): each backend registers one executor pair per engine in
+``_DISPATCH``, and :func:`resolve_engine` turns the caller's ``engine=``
+argument into a dispatch key by consulting the plan's
+:class:`~repro.core.backends.ExecutionContract` — no backend string
+matching at the call sites.  The registered pairs:
 
-* ``"naive"`` — binds the values to the planned patterns and dispatches to
-  the faithful numpy executors, passing the plan's pre-computed
-  ``Preprocess`` so nothing is re-analyzed.  These are the bit-exact
-  oracles of the paper's algorithms.
-* ``"stream"`` — replays the plan's precomputed product stream
+* ``("host", "naive")`` — the faithful numpy executors, passing the plan's
+  pre-computed ``Preprocess`` so nothing is re-analyzed.  These are the
+  bit-exact oracles of the paper's algorithms.
+* ``("host", "stream")`` — the plan's precomputed product stream
   (``core.fast``, DESIGN.md §9): one vectorized gather → multiply →
   segment-reduce pass, no per-column Python loop.  Canonical output order,
-  last-ulp fp-reassociation vs the oracles.  Default for ``expand`` (whose
-  naive executor computes the same contraction in the same order, slower);
-  opt-in for every other host method.
-
-Pallas backend: gathers each group's padded value operand with the plan's
-precomputed ``b_vgather``/``b_vmask`` (one fused masked gather per launch —
-no full padded-B intermediate, no per-call ``np.where`` mask allocation),
-launches one kernel per plan group via ``kernels.ops.run_{spa,spars,hash}``,
-and compacts each group's accumulator tile / hash tables straight into
-column-sliced CSC through ``sparse.format.CSCBuilder`` — the dense
-``[m, n]`` sink of the pre-plan backend no longer exists; peak transient
-memory is one ``[m, tile_cols]`` tile.
+  last-ulp fp-reassociation vs the oracles.  Default for ``expand``.
+* ``("pallas", "naive")`` — gathers each group's padded value operand with
+  the plan's precomputed ``b_vgather``/``b_vmask``, launches one kernel per
+  plan group via ``kernels.ops.run_{spa,spars,hash}``, and compacts each
+  group's tile straight into column-sliced CSC (no dense ``[m, n]`` sink;
+  peak transient memory is one ``[m, tile_cols]`` tile).
+* ``("jax", "stream")`` — the device-resident stream (``core.jax_stream``,
+  DESIGN.md §10): a jitted, differentiable pure-JAX replay of the same
+  contraction; one device dispatch per execution.
 
 ``execute_batched(plan, a_vals [B, nnz], b_vals [B, nnz])`` is the batched
-numeric phase (DESIGN.md §7): B same-pattern multiplies through *one* set of
-kernel launches (Pallas: each plan group launches once with a leading batch
-axis) or one vectorized numpy pass over the value axis (the stream engine
-and host SPA; the remaining naive host executors fall back to a per-element
-loop).  Results are bit-identical to a Python loop of ``execute``.
+numeric phase (DESIGN.md §7): B same-pattern multiplies through *one*
+traversal of the plan (Pallas: each group launches once with a leading
+batch axis; jax: one vmapped dispatch; host: vectorized value-axis passes
+where available).  Results are bit-identical to a Python loop of
+``execute`` per backend engine.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import fast, naive
+from repro.core import backends, fast, jax_stream, naive
+from repro.core.backends import check_engine, default_engine, get_backend
 from repro.core.expand import spgemm_expand
 from repro.core.planner import SpgemmPlan
 from repro.sparse.format import (
@@ -56,37 +58,40 @@ from repro.sparse.partition import csc_empty, csc_hstack, merge_csc_partials
 # engine is always vectorized and every other naive executor loops
 _BATCHED_HOST: dict = {}
 
-ENGINES = (None, "naive", "stream")
+# union of every backend's accepted engine= spellings (back-compat alias)
+ENGINES = backends.engine_spellings()
+
+# (backend, resolved engine) -> (execute_fn, execute_batched_fn); the
+# executor half of the backend registry.  Uniform signature:
+# fn(plan, a_values, b_values, *, interpret, stats, validate)
+_DISPATCH: dict = {}
+
+
+def register_executor(backend: str, engine: str, fn, fn_batched) -> None:
+    _DISPATCH[(backend, engine)] = (fn, fn_batched)
 
 
 def resolve_engine(plan, engine: str | None) -> str:
     """The engine an execution will run: explicit choice or the default.
 
-    ``None`` resolves to the method's default: ``"stream"`` for host
-    ``expand`` — the stream computes the same canonical contraction
-    (identical structure; values agree to ``np.add.reduceat``'s possible
-    within-segment re-association, see ``core.fast``) — and ``"naive"``
-    for every other method, so the oracle executors stay the bit-exact
-    reference.  ``"stream"`` is a host-backend engine; requesting it on a
-    Pallas plan raises.
+    Consults the plan backend's contract (``core.backends``): unknown
+    spellings and engines the backend does not implement raise there
+    (e.g. ``"stream"`` needs a stream-capable plan, and the jax backend
+    has no ``"naive"`` oracles).  ``None`` resolves to the contract's
+    default for the plan's method: host defaults to the bit-exact naive
+    oracles except for ``expand`` (whose naive executor computes the same
+    contraction as the stream, slower); jax always runs its device stream.
     """
-    _check_engine(plan, engine)
-    if plan.backend != "host":
-        return "naive"
+    contract = get_backend(plan.backend)
+    check_engine(contract, engine)
     if engine is None:
-        return "stream" if plan.method == "expand" else "naive"
+        return default_engine(contract, plan.method)
     return engine
 
 
 def _check_engine(plan, engine: str | None) -> None:
     """Engine-argument validation shared by the untiled and tiled paths."""
-    if engine not in ENGINES:
-        raise ValueError(
-            f"unknown engine {engine!r}; one of None, 'naive', 'stream'")
-    if engine == "stream" and plan.backend != "host":
-        raise ValueError(
-            "engine='stream' is a host-backend engine (Pallas plans "
-            "run their own kernel schedule)")
+    check_engine(get_backend(plan.backend), engine)
 
 
 def execute(plan: SpgemmPlan, a_values, b_values, *,
@@ -99,24 +104,16 @@ def execute(plan: SpgemmPlan, a_values, b_values, *,
     Shapes and nnz are checked against the planned patterns (O(1)); a
     same-shape same-nnz operand with a different pattern is by default the
     caller's responsibility — pass ``validate="fingerprint"`` to re-hash the
-    operand structure (O(nnz)) and reject any pattern mismatch.  ``engine``
-    selects the host numeric engine (see :func:`resolve_engine`).
-    ``stats``, if given, is filled with execution statistics (engine, tile
-    shapes, launch count) — tests use it to assert the
-    no-dense-intermediate guarantee.
+    operand structure (O(nnz)) and reject any pattern mismatch (honoured by
+    every engine, including the stream and jax paths).  ``engine`` selects
+    the numeric engine (see :func:`resolve_engine`).  ``stats``, if given,
+    is filled with execution statistics (engine, tile shapes, launch
+    count) — tests use it to assert the no-dense-intermediate guarantee.
     """
-    plan.a.check_compatible(a_values, validate)
-    plan.b.check_compatible(b_values, validate)
     eng = resolve_engine(plan, engine)
-    if plan.backend == "host":
-        if eng == "stream":
-            return fast.execute_stream(plan, _values(a_values),
-                                       _values(b_values), stats=stats)
-        if stats is not None:
-            stats["engine"] = "naive"
-        return _execute_host(plan, a_values, b_values)
-    return _execute_pallas(plan, a_values, b_values, interpret=interpret,
-                           stats=stats)
+    fn, _ = _DISPATCH[(plan.backend, eng)]
+    return fn(plan, a_values, b_values, interpret=interpret, stats=stats,
+              validate=validate)
 
 
 def execute_batched(plan: SpgemmPlan, a_values, b_values, *,
@@ -132,42 +129,91 @@ def execute_batched(plan: SpgemmPlan, a_values, b_values, *,
 
     Pallas backend: every plan group launches once for all B value sets (a
     vmapped leading batch axis), so the launch count is independent of B and
-    peak transient memory is one ``[B, m, tile_cols]`` tile.  Host backend:
-    the stream engine broadcasts its gather/segment-reduce pass over the
-    value axis, naive SPA runs one vectorized pass, and the remaining naive
-    executors (SPARS/HASH/hybrids/ESC) fall back to a per-element loop
-    (DESIGN.md §7/§9).
+    peak transient memory is one ``[B, m, tile_cols]`` tile.  Jax backend:
+    one vmapped device dispatch.  Host backend: the stream engine
+    broadcasts its gather/segment-reduce pass over the value axis, naive
+    SPA runs one vectorized pass, and the remaining naive executors
+    (SPARS/HASH/hybrids/ESC) fall back to a per-element loop
+    (DESIGN.md §7/§9/§10).  ``engine``/``validate`` behave exactly as in
+    :func:`execute`.
     """
-    av = plan.a.batched_values(a_values, validate)
-    bv = plan.b.batched_values(b_values, validate)
+    eng = resolve_engine(plan, engine)
+    _, fn = _DISPATCH[(plan.backend, eng)]
+    return fn(plan, a_values, b_values, interpret=interpret, stats=stats,
+              validate=validate)
+
+
+def _check_batch(av, bv) -> int:
     if av.shape[0] != bv.shape[0]:
         raise ValueError(
             f"batch mismatch: A has {av.shape[0]} value sets, "
             f"B has {bv.shape[0]}")
-    batch = av.shape[0]
+    batch = int(av.shape[0])
     if batch == 0:
         raise ValueError("empty batch")
-    eng = resolve_engine(plan, engine)
-    if plan.backend == "host":
-        if eng == "stream":
-            # fast.py reports stats["path"]: "vectorized" (2-D passes) or
-            # "rowloop" (per-row 1-D passes on long streams)
-            out = fast.execute_stream_batched(plan, av, bv, stats=stats)
-            if stats is not None:
-                stats["batch"] = batch
-            return out
-        vectorized = _BATCHED_HOST.get(plan.method)
-        if vectorized is not None:
-            out = vectorized(plan, av, bv)
-        else:
-            out = [_execute_host(plan, av[b], bv[b]) for b in range(batch)]
-        if stats is not None:
-            stats["engine"] = "naive"
-            stats["batch"] = batch
-            stats["path"] = "vectorized" if vectorized is not None else "loop"
-        return out
-    return _execute_pallas_batched(plan, av, bv, interpret=interpret,
-                                   stats=stats)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# host executors (naive oracles + the product stream)
+# ---------------------------------------------------------------------------
+
+
+def _host_naive(plan, a_values, b_values, *, interpret=True, stats=None,
+                validate=None) -> CSC:
+    del interpret
+    plan.a.check_compatible(a_values, validate)
+    plan.b.check_compatible(b_values, validate)
+    if stats is not None:
+        stats["engine"] = "naive"
+    return _execute_host(plan, a_values, b_values)
+
+
+def _host_stream(plan, a_values, b_values, *, interpret=True, stats=None,
+                 validate=None) -> CSC:
+    del interpret
+    plan.a.check_compatible(a_values, validate)
+    plan.b.check_compatible(b_values, validate)
+    return fast.execute_stream(plan, _values(a_values), _values(b_values),
+                               stats=stats)
+
+
+def _host_naive_batched(plan, a_values, b_values, *, interpret=True,
+                        stats=None, validate=None) -> list:
+    del interpret
+    av = plan.a.batched_values(a_values, validate)
+    bv = plan.b.batched_values(b_values, validate)
+    batch = _check_batch(av, bv)
+    vectorized = _BATCHED_HOST.get(plan.method)
+    if vectorized is not None:
+        out = vectorized(plan, av, bv)
+    else:
+        out = [_execute_host(plan, av[b], bv[b]) for b in range(batch)]
+    if stats is not None:
+        stats["engine"] = "naive"
+        stats["batch"] = batch
+        stats["path"] = "vectorized" if vectorized is not None else "loop"
+    return out
+
+
+def _host_stream_batched(plan, a_values, b_values, *, interpret=True,
+                         stats=None, validate=None) -> list:
+    del interpret
+    av = plan.a.batched_values(a_values, validate)
+    bv = plan.b.batched_values(b_values, validate)
+    batch = _check_batch(av, bv)
+    # fast.py reports stats["path"]: "vectorized" (2-D passes) or
+    # "rowloop" (per-row 1-D passes on long streams)
+    out = fast.execute_stream_batched(plan, av, bv, stats=stats)
+    if stats is not None:
+        stats["batch"] = batch
+    return out
+
+
+register_executor("host", "naive", _host_naive, _host_naive_batched)
+register_executor("host", "stream", _host_stream, _host_stream_batched)
+register_executor("jax", "stream", jax_stream.execute_jax,
+                  jax_stream.execute_jax_batched)
 
 
 # ---------------------------------------------------------------------------
@@ -184,6 +230,34 @@ def _tile_values(plan, tile, av, bv):
     """Slice the parent value arrays down to one tile (pattern-static)."""
     lo, hi = tile.a_vals
     return av[..., lo:hi], bv[..., tile.b_vals]
+
+
+def _check_tile_engines(plan, engine) -> None:
+    """An explicit engine must hold on *every* tile of the grid.
+
+    A tile grid may mix backends (host tiles + "jax" device-stream tiles);
+    silently downgrading a tile that lacks the requested engine would hand
+    back e.g. f32 device results where ``engine="naive"`` promised the
+    bit-exact f64 oracles — loud rejection instead (``engine=None`` runs
+    each tile's per-method default).
+    """
+    if engine is None:
+        return
+    missing = sorted({t.plan.backend for t in plan.tiles
+                      if engine not in t.plan.contract.engines})
+    if missing:
+        raise ValueError(
+            f"engine={engine!r} is not available on every tile of this "
+            f"grid (missing on {missing} tile backends); use engine=None "
+            "for per-tile defaults, or restrict candidates= at plan time")
+
+
+def _host_child(c: CSC) -> CSC:
+    """Host view of a child tile result (jax tiles return device values;
+    the merge/stitch reduction is a host pass)."""
+    if isinstance(c.values, np.ndarray):
+        return c
+    return CSC(np.asarray(c.values), c.row_indices, c.col_ptr, c.shape)
 
 
 def _merge_and_stitch(plan, per_block, dtype) -> CSC:
@@ -235,14 +309,17 @@ def execute_tiled(plan, a_values, b_values, *, interpret: bool = True,
     Runs every tile's child plan on the tile's value slices, accumulates
     row-block partials per column block (k-ascending; a single row block is
     a bit-identical passthrough), and stitches the column blocks.
-    ``engine`` is forwarded to every child plan (``None``: per-method
-    defaults).  ``stats`` records the grid, the per-tile method choices,
-    and — on the Pallas backend — the aggregated launch count and peak
-    transient tile size.
+    ``engine`` is forwarded to every child plan and must be available on
+    every tile's backend (:func:`_check_tile_engines` — a mixed host/jax
+    grid accepts ``None``/``"stream"`` but rejects ``"naive"``, whose
+    bit-exact promise the device tiles cannot keep).  ``stats`` records
+    the grid, the per-tile method choices, and — on the Pallas backend —
+    the aggregated launch count and peak transient tile size.
     """
     plan.a.check_compatible(a_values, validate)
     plan.b.check_compatible(b_values, validate)
     _check_engine(plan, engine)
+    _check_tile_engines(plan, engine)
     av = _values(a_values)[: int(plan.a.col_ptr[-1])]
     bv = _values(b_values)[: int(plan.b.col_ptr[-1])]
     dtype = _tiled_dtype(plan, av, bv)
@@ -252,9 +329,9 @@ def execute_tiled(plan, a_values, b_values, *, interpret: bool = True,
         ta, tb = _tile_values(plan, tile, av, bv)
         cs = {} if (stats is not None
                     and plan.backend == "pallas") else None
-        per_block[tile.n].append(
+        per_block[tile.n].append(_host_child(
             tile.plan.execute(ta, tb, interpret=interpret, stats=cs,
-                              engine=engine))
+                              engine=engine)))
         if cs is not None:
             child_stats.append(cs)
     _record_tile_stats(plan, stats, child_stats)
@@ -271,18 +348,14 @@ def execute_tiled_batched(plan, a_values, b_values, *,
     Each tile's child plan executes batched (one launch set per tile,
     independent of B on the Pallas backend); the merge/stitch reduction
     then runs per batch element, bit-identical to looping
+    :func:`execute_tiled`.  ``engine`` forwards per tile exactly as in
     :func:`execute_tiled`.
     """
     av = plan.a.batched_values(a_values, validate)
     bv = plan.b.batched_values(b_values, validate)
-    if av.shape[0] != bv.shape[0]:
-        raise ValueError(
-            f"batch mismatch: A has {av.shape[0]} value sets, "
-            f"B has {bv.shape[0]}")
-    batch = av.shape[0]
-    if batch == 0:
-        raise ValueError("empty batch")
+    batch = _check_batch(av, bv)
     _check_engine(plan, engine)
+    _check_tile_engines(plan, engine)
     dtype = _tiled_dtype(plan, av, bv)
     per_block = [{ni: [] for ni in range(plan.grid[1])}
                  for _ in range(batch)]
@@ -291,10 +364,10 @@ def execute_tiled_batched(plan, a_values, b_values, *,
         ta, tb = _tile_values(plan, tile, av, bv)
         cs = {} if (stats is not None
                     and plan.backend == "pallas") else None
-        outs = tile.plan.execute_batched(ta, tb, interpret=interpret,
-                                         stats=cs, engine=engine)
+        outs = tile.plan.execute_batched(
+            ta, tb, interpret=interpret, stats=cs, engine=engine)
         for bi, c in enumerate(outs):
-            per_block[bi][tile.n].append(c)
+            per_block[bi][tile.n].append(_host_child(c))
         if cs is not None:
             child_stats.append(cs)
     _record_tile_stats(plan, stats, child_stats)
@@ -395,9 +468,12 @@ def _assemble_batched(batch, cols_rows, cols_vals, shape, dtype) -> list:
 
 
 def _execute_pallas(plan: SpgemmPlan, a_values, b_values, *,
-                    interpret: bool, stats: dict | None) -> CSC:
+                    interpret: bool = True, stats: dict | None = None,
+                    validate: str | None = None) -> CSC:
     from repro.kernels import ops as kops
 
+    plan.a.check_compatible(a_values, validate)
+    plan.b.check_compatible(b_values, validate)
     lay = plan.pallas
     m, n = plan.shape
     av = padded_values(_values(a_values), lay.a_gather,
@@ -437,14 +513,17 @@ def _execute_pallas(plan: SpgemmPlan, a_values, b_values, *,
     return c
 
 
-def _execute_pallas_batched(plan: SpgemmPlan, av: np.ndarray,
-                            bv: np.ndarray, *, interpret: bool,
-                            stats: dict | None) -> list:
+def _execute_pallas_batched(plan: SpgemmPlan, a_values, b_values, *,
+                            interpret: bool = True,
+                            stats: dict | None = None,
+                            validate: str | None = None) -> list:
     from repro.kernels import ops as kops
 
+    av = plan.a.batched_values(a_values, validate)
+    bv = plan.b.batched_values(b_values, validate)
+    batch = _check_batch(av, bv)
     lay = plan.pallas
     m, n = plan.shape
-    batch = av.shape[0]
     avp = padded_values_batched(av, lay.a_gather,
                                 lay.a_mask).astype(np.float32, copy=False)
     a_arrs = kops.device_operand(lay.a_rows, avp, lay.a_nnz)
@@ -479,6 +558,10 @@ def _execute_pallas_batched(plan: SpgemmPlan, av: np.ndarray,
         stats["result_shape"] = (m, n)
         stats["batch"] = batch
     return out
+
+
+register_executor("pallas", "naive", _execute_pallas,
+                  _execute_pallas_batched)
 
 
 def _values(x) -> np.ndarray:

@@ -1,0 +1,306 @@
+"""Device-resident stream execution: jit-compatible, differentiable SpGEMM.
+
+The product stream (``core.fast``, DESIGN.md §9) already reduced the numeric
+phase of a cached host plan to a fixed gather → multiply → segment-reduce
+contraction.  This module compiles that contraction for the ``"jax"``
+backend (DESIGN.md §10): the plan's frozen index arrays move to the device
+once (cached on the plan alongside the numpy ones), and the numeric phase
+becomes a jitted pure-JAX function of the two value arrays::
+
+    prod   = a_values[a_pos] * b_values[b_pos]          # jnp.take
+    c_vals = segment_sum(prod, seg_ids, num_segments)   # plan-static nnz_c
+
+Because every shape in that function is plan-static, it traces once and
+replays from XLA's compiled-call cache — an execution is a single device
+dispatch, with no per-group Python loop (the Pallas path launches one
+kernel per plan group from Python) and no host round-trip.
+
+**Differentiability.**  The contraction is bilinear, so its VJP is two more
+stream replays through the *same* index arrays — no new symbolic work::
+
+    dL/dA[p] = Σ_{q : a_pos[q]=p}  ḡ[seg(q)] · B[b_pos[q]]
+    dL/dB[p] = Σ_{q : b_pos[q]=p}  ḡ[seg(q)] · A[a_pos[q]]
+
+i.e. broadcast the output cotangent back over the products (a ``take``
+through ``seg_ids``), weight by the *other* operand's gathered values, and
+scatter-add through ``a_pos``/``b_pos`` (a ``segment_sum`` with the
+operand's nnz as the static segment count).  :func:`stream_fn` installs
+this as a ``jax.custom_vjp`` so ``jax.grad`` of anything downstream of the
+C values is itself a pair of stream replays.  ``jax.vmap`` composes with
+the custom vjp, which is how the batched path (DESIGN.md §7) rides one
+trace for a whole ``[B, nnz]`` value stack.
+
+**Guard semantics.**  Device streams obey the same plan-memory guard as
+host streams (``stream_limit`` resolved at plan time).  A guarded jax plan
+executes by falling back to the *host* stream engine (transient rebuild,
+numerically the host stream's result) when the operands are concrete;
+under a trace (``jax.jit``/``jax.grad`` — the operands are tracers) the
+fallback is impossible and a capability error explains the fix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fast
+from repro.sparse.format import CSC, BatchedCSC
+
+# int32 device indices: the plan-memory guard caps streams far below 2**31
+# products.  a_pos/b_pos index the *operand* value arrays, whose nnz is not
+# bounded by the stream length, so the overflow check below covers both.
+_I32_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceStream:
+    """Device-resident half of a plan's :class:`~repro.core.fast.ProductStream`.
+
+    ``a_pos``/``b_pos``/``seg_ids`` live on the device (int32; one entry per
+    scalar product, C-slot sort permutation pre-applied exactly as in the
+    host stream).  ``c_rows``/``c_col_ptr`` stay host-side numpy — they are
+    the *structure* of every result this plan produces and are shared
+    (frozen) with the host stream.
+    """
+
+    a_pos: jax.Array        # [P] int32: A value position of each product
+    b_pos: jax.Array        # [P] int32: B value position of each product
+    seg_ids: jax.Array      # [P] int32: C slot of each product (ascending)
+    c_rows: np.ndarray      # [nnz_c] int32 (host, frozen)
+    c_col_ptr: np.ndarray   # [n+1] int32 (host, frozen)
+    shape: Tuple[int, int]
+    n_products: int
+    num_segments: int       # nnz_c — the static segment_sum count
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by the stream's index arrays."""
+        return int(self.a_pos.nbytes + self.b_pos.nbytes
+                   + self.seg_ids.nbytes)
+
+
+def device_stream(plan) -> Optional[DeviceStream]:
+    """The plan's device-resident stream, built lazily and memoized.
+
+    Derived from the (host) :attr:`plan.stream` on first access and cached
+    on the plan alongside it — ``plan.device_stream_nbytes`` /
+    ``plan_cache_info()['device_stream_bytes']`` report the device half
+    separately.  ``None`` when the plan-memory guard tripped (no host
+    stream to lift) or the plan's backend carries no stream.
+    """
+    s = plan.stream
+    if s is None:
+        return None
+    memo = plan._stream_memo
+    if "device" not in memo:
+        # a hard error beats int32-wrapped in-bounds-promised gathers:
+        # products/output slots (huge guard) or *operand* positions
+        # (a_pos/b_pos index the value arrays — a small stream over a
+        # >2**31-nnz operand still needs wide indices) past int32
+        if max(s.n_products, s.nnz, int(plan.a.col_ptr[-1]),
+               int(plan.b.col_ptr[-1])) > _I32_MAX:
+            raise ValueError(
+                f"stream of {s.n_products} products over operands of nnz "
+                f"{int(plan.a.col_ptr[-1])}/{int(plan.b.col_ptr[-1])} "
+                "exceeds int32 device indexing; lower stream_limit / "
+                "fast.STREAM_MAX_PRODUCTS or shrink the tile")
+        # segment id per product: segment p spans
+        # [seg_starts[p], seg_starts[p+1]) of the sorted stream
+        lens = np.diff(np.append(s.seg_starts, s.n_products))
+        seg_ids = np.repeat(np.arange(s.nnz, dtype=np.int32), lens)
+        with jax.ensure_compile_time_eval():
+            # the lazy build may run *inside* a caller's jit trace (the
+            # first traced execution of a fresh plan); the index arrays
+            # must still come out concrete — they are plan state shared by
+            # every later trace, not constants of this one
+            dev_arrays = (jnp.asarray(s.a_pos, jnp.int32),
+                          jnp.asarray(s.b_pos, jnp.int32),
+                          jnp.asarray(seg_ids))
+        memo["device"] = DeviceStream(
+            a_pos=dev_arrays[0],
+            b_pos=dev_arrays[1],
+            seg_ids=dev_arrays[2],
+            c_rows=s.c_rows,
+            c_col_ptr=s.c_col_ptr,
+            shape=s.shape,
+            n_products=s.n_products,
+            num_segments=s.nnz,
+        )
+    return memo["device"]
+
+
+def _guard_error(plan) -> ValueError:
+    if not plan.contract.carries_stream:
+        # stream-less backend (pallas): a capability gap, not a guard trip
+        return ValueError(
+            f"the {plan.backend!r} backend carries no product stream — "
+            "plan on backend='jax' (or 'host') for stream execution")
+    return ValueError(
+        f"plan's product stream exceeds its plan-memory guard "
+        f"(stream_limit={plan.stream_limit}), so there is no device-resident "
+        "stream to trace: a jitted/differentiated execution cannot fall "
+        "back to the host engine.  Raise stream_limit= (or "
+        "fast.STREAM_MAX_PRODUCTS) when planning, or execute on the host "
+        "backend outside the trace")
+
+
+# the stream's indices are plan-frozen and in-bounds by construction, so
+# every gather/scatter skips XLA's out-of-bounds clamping (the default
+# "fill" mode materializes [P]-sized bounds-check compares that dominate
+# both compile and run time on large streams)
+_IN_BOUNDS = jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS
+
+
+def _take(values, idx):
+    return jnp.asarray(values).at[idx].get(mode=_IN_BOUNDS)
+
+
+def _bilinear_contract(dev: DeviceStream):
+    """The custom-vjp gather→multiply→segment-sum contraction for ``dev``."""
+
+    @jax.custom_vjp
+    def contract(a_values, b_values):
+        prod = _take(a_values, dev.a_pos) * _take(b_values, dev.b_pos)
+        return jax.ops.segment_sum(prod, dev.seg_ids,
+                                   num_segments=dev.num_segments,
+                                   indices_are_sorted=True,
+                                   mode=_IN_BOUNDS)
+
+    def fwd(a_values, b_values):
+        return contract(a_values, b_values), (a_values, b_values)
+
+    def bwd(residuals, g):
+        a_values, b_values = residuals
+        # cotangent per product, then scatter-add through the same frozen
+        # indices the forward gathered through (module docstring)
+        g_prod = _take(g, dev.seg_ids)
+        d_a = jax.ops.segment_sum(g_prod * _take(b_values, dev.b_pos),
+                                  dev.a_pos,
+                                  num_segments=a_values.shape[0],
+                                  mode=_IN_BOUNDS)
+        d_b = jax.ops.segment_sum(g_prod * _take(a_values, dev.a_pos),
+                                  dev.b_pos,
+                                  num_segments=b_values.shape[0],
+                                  mode=_IN_BOUNDS)
+        return d_a, d_b
+
+    contract.defvjp(fwd, bwd)
+    return contract
+
+
+def stream_fn(plan):
+    """The plan's jitted numeric function ``f(a_values, b_values) -> c_values``.
+
+    Pure, jit-compatible, differentiable (custom vjp) — the traced entry
+    point of the jax backend.  Memoized on the plan, so repeated calls hit
+    one trace cache; guarded plans raise the capability error.
+    """
+    memo = plan._stream_memo
+    if "jax_fn" not in memo:
+        dev = device_stream(plan)
+        if dev is None:
+            raise _guard_error(plan)
+        memo["jax_contract"] = _bilinear_contract(dev)
+        memo["jax_fn"] = jax.jit(memo["jax_contract"])
+    return memo["jax_fn"]
+
+
+def stream_fn_batched(plan):
+    """Vmapped twin of :func:`stream_fn`: ``[B, nnz]`` stacks, one trace.
+
+    ``jit(vmap(contract))`` — the batch axis becomes a leading device axis,
+    so the dispatch count is independent of B and a new batch size is a
+    shape change (one retrace), never B traces.
+    """
+    memo = plan._stream_memo
+    if "jax_fn_batched" not in memo:
+        stream_fn(plan)   # ensures jax_contract (or raises the guard error)
+        memo["jax_fn_batched"] = jax.jit(jax.vmap(memo["jax_contract"]))
+    return memo["jax_fn_batched"]
+
+
+def _is_traced(*arrays) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in arrays)
+
+
+def _operand_values(operand):
+    """Raw value array of an execute-time operand, namespace-preserving."""
+    return operand.values if isinstance(operand, (CSC, BatchedCSC)) \
+        else operand
+
+
+def execute_jax(plan, a_values, b_values, *, interpret: bool = True,
+                stats: dict | None = None,
+                validate: str | None = None) -> CSC:
+    """Numeric phase of a jax-backend plan (executor dispatch target).
+
+    Returns a CSC whose values are a device array on the plan's canonical
+    stream structure.  Guarded plans (``plan.stream is None``) fall back to
+    the host stream engine on concrete operands and raise the capability
+    error under a trace.  ``interpret`` is accepted for signature
+    uniformity and ignored (nothing to interpret — the function is XLA).
+    """
+    del interpret
+    plan.a.check_compatible(a_values, validate)
+    plan.b.check_compatible(b_values, validate)
+    av = _operand_values(a_values)
+    bv = _operand_values(b_values)
+    if plan.stream is None:
+        if _is_traced(av, bv):
+            raise _guard_error(plan)
+        out = fast.execute_stream(plan, np.asarray(av), np.asarray(bv),
+                                  stats=stats)
+        if stats is not None:
+            stats["backend"] = "jax"
+            stats["fallback"] = "host"
+        return out
+    vals = stream_fn(plan)(av, bv)
+    s = plan.stream
+    if stats is not None:
+        stats.update(engine="stream", backend="jax", device=True,
+                     fallback=None, stream_products=s.n_products,
+                     result_shape=s.shape)
+    return CSC(vals, s.c_rows, s.c_col_ptr, s.shape)
+
+
+def _batched_operand(pattern, operand, validate):
+    """[B, nnz] value stack of a batched operand, tracer- and device-safe
+    (validation shared with the host paths via the Pattern contract; the
+    values keep their namespace — no ``np.asarray`` materialization)."""
+    pattern.check_batched_compatible(operand, validate)
+    return operand.values if isinstance(operand, BatchedCSC) else operand
+
+
+def execute_jax_batched(plan, a_values, b_values, *, interpret: bool = True,
+                        stats: dict | None = None,
+                        validate: str | None = None) -> list:
+    """Batched numeric phase: B value sets through one vmapped dispatch."""
+    del interpret
+    from repro.core.executor import _check_batch   # lazy: executor imports us
+
+    av = _batched_operand(plan.a, a_values, validate)
+    bv = _batched_operand(plan.b, b_values, validate)
+    batch = _check_batch(av, bv)
+    if plan.stream is None:
+        if _is_traced(av, bv):
+            raise _guard_error(plan)
+        out = fast.execute_stream_batched(
+            plan, np.asarray(av)[:, : int(plan.a.col_ptr[-1])],
+            np.asarray(bv)[:, : int(plan.b.col_ptr[-1])], stats=stats)
+        if stats is not None:
+            stats["backend"] = "jax"
+            stats["fallback"] = "host"
+            stats["batch"] = batch
+        return out
+    vals = stream_fn_batched(plan)(av, bv)
+    s = plan.stream
+    if stats is not None:
+        stats.update(engine="stream", backend="jax", device=True,
+                     fallback=None, path="vmap", batch=batch,
+                     stream_products=s.n_products, result_shape=s.shape)
+    return [CSC(vals[b], s.c_rows, s.c_col_ptr, s.shape)
+            for b in range(batch)]

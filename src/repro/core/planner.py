@@ -26,6 +26,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backends
 from repro.core.analysis import Preprocess, preprocess
 from repro.core.cost import AUTO_CANDIDATES, CostConstants, choose_method
 import repro.core.fast as _fast
@@ -55,8 +56,9 @@ ALGORITHMS = {
     "expand": {},  # fast vectorized host executor (not a paper algorithm)
 }
 
-# methods with no Pallas kernel family (host-only executors)
-HOST_ONLY = ("esc", "expand")
+# methods with no Pallas kernel family (host-only executors); the canonical
+# definition lives on the pallas backend contract (core/backends.py)
+HOST_ONLY = backends.HOST_ONLY_METHODS
 
 
 def resolve_params(
@@ -169,21 +171,45 @@ class Pattern:
                     "operand sparsity pattern does not match this plan "
                     "(fingerprint mismatch despite equal shape and nnz)")
         else:
-            v = np.asarray(operand)
-            if v.ndim != 1:
+            # shape-only checks (no np.asarray): raw operands may be jax
+            # tracers inside a jitted stream execution (DESIGN.md §10)
+            shape = np.shape(operand)
+            if len(shape) != 1:
                 raise ValueError(
-                    f"expected a 1-D value array, got shape {v.shape} "
+                    f"expected a 1-D value array, got shape {shape} "
                     "(use execute_batched for [B, nnz] value stacks)")
-            if v.shape[0] < int(self.col_ptr[-1]):
+            if shape[0] < int(self.col_ptr[-1]):
                 raise ValueError(
                     f"need >= {int(self.col_ptr[-1])} values, "
-                    f"got {v.shape[0]}")
+                    f"got {shape[0]}")
 
     def with_values(self, values, validate: str | None = None) -> CSC:
         """Bind numeric values to this pattern (accepts a CSC or raw array)."""
         self.check_compatible(values, validate)
         v = values.values if isinstance(values, CSC) else np.asarray(values)
         return CSC(v, self.row_indices, self.col_ptr, self.shape)
+
+    def check_batched_compatible(self, operand,
+                                 validate: str | None = None) -> None:
+        """Batched twin of :meth:`check_compatible`, shape-only for raw
+        stacks (tracer-safe — the single source of the batched-operand
+        contract, shared by the host/pallas value extraction and the jax
+        stream's namespace-preserving path)."""
+        if validate not in (None, "fingerprint"):
+            raise ValueError(
+                f"unknown validate mode {validate!r}; None or 'fingerprint'")
+        if isinstance(operand, BatchedCSC):
+            self.check_compatible(operand, validate)
+            return
+        shape = np.shape(operand)
+        if len(shape) != 2:
+            raise ValueError(
+                "batched operand must be a BatchedCSC or a [B, nnz] "
+                f"value array, got shape {shape}")
+        if shape[1] < int(self.col_ptr[-1]):
+            raise ValueError(
+                f"need >= {int(self.col_ptr[-1])} values per batch "
+                f"element, got {shape[1]}")
 
     def batched_values(self, values, validate: str | None = None
                        ) -> np.ndarray:
@@ -192,22 +218,9 @@ class Pattern:
         Accepts a :class:`BatchedCSC` with this pattern or a raw ``[B, nnz]``
         array; a single CSC / 1-D array is rejected (use ``execute``).
         """
-        if validate not in (None, "fingerprint"):
-            raise ValueError(
-                f"unknown validate mode {validate!r}; None or 'fingerprint'")
-        if isinstance(values, BatchedCSC):
-            self.check_compatible(values, validate)
-            v = _np(values.values)
-        else:
-            v = np.asarray(values)
-            if v.ndim != 2:
-                raise ValueError(
-                    "batched operand must be a BatchedCSC or a [B, nnz] "
-                    f"value array, got shape {v.shape}")
-            if v.shape[1] < int(self.col_ptr[-1]):
-                raise ValueError(
-                    f"need >= {int(self.col_ptr[-1])} values per batch "
-                    f"element, got {v.shape[1]}")
+        self.check_batched_compatible(values, validate)
+        v = _np(values.values) if isinstance(values, BatchedCSC) \
+            else np.asarray(values)
         return v[:, : int(self.col_ptr[-1])]
 
 
@@ -282,17 +295,25 @@ class SpgemmPlan:
         default_factory=dict, repr=False, compare=False)
 
     @property
+    def contract(self) -> "backends.ExecutionContract":
+        """This plan's backend capability contract (core/backends.py)."""
+        return backends.get_backend(self.backend)
+
+    @property
     def stream(self) -> Optional[ProductStream]:
         """Lazily-built product stream (``engine="stream"``, DESIGN.md §9).
 
         Built on first access so plans that never run the stream engine pay
         neither the plan-time lexsort nor the O(flops) resident memory;
         memoized on the plan, so tiled child plans shared through the LRU
-        share one stream.  ``None`` on Pallas plans and when the stream
+        share one stream.  Carried by every stream-capable backend
+        (``contract.carries_stream``: host and jax — the jax backend builds
+        its device-resident index arrays from this host stream and keeps
+        both, DESIGN.md §10).  ``None`` on Pallas plans and when the stream
         would exceed ``stream_limit`` (the guard resolved at plan time) —
         stream executions then rebuild transiently.
         """
-        if self.backend != "host":
+        if not self.contract.carries_stream:
             return None
         if "stream" not in self._stream_memo:
             self._stream_memo["stream"] = build_product_stream(
@@ -301,7 +322,7 @@ class SpgemmPlan:
 
     @property
     def stream_nbytes(self) -> int:
-        """Bytes of stream index data currently held by this plan.
+        """Bytes of host stream index data currently held by this plan.
 
         Reads the memo without triggering the lazy build (0 until the
         first stream execution, and 0 when the guard tripped) — this is
@@ -309,6 +330,39 @@ class SpgemmPlan:
         """
         s = self._stream_memo.get("stream")
         return s.nbytes if s is not None else 0
+
+    @property
+    def device_stream_nbytes(self) -> int:
+        """Bytes of *device-resident* stream index data held by this plan.
+
+        The jax backend caches the stream's index arrays on device alongside
+        the host ones (DESIGN.md §10); this reads the memo without
+        triggering the lazy build — ``plan_cache_info()
+        ['device_stream_bytes']`` aggregates it separately from host bytes.
+        """
+        d = self._stream_memo.get("device")
+        return d.nbytes if d is not None else 0
+
+    def stream_apply(self, a_values, b_values):
+        """Jit-compatible, differentiable numeric phase: C values only.
+
+        The jax-backend entry point for traced code (DESIGN.md §10):
+        ``a_values``/``b_values`` are value arrays (or tracers) aligned with
+        the planned patterns, and the return is the ``[nnz_c]`` C value
+        array of the plan's canonical output structure
+        (``plan.stream.c_rows`` / ``c_col_ptr``) — a pure function of the
+        inputs, safe under ``jax.jit``/``jax.grad``/``jax.vmap``.  Requires
+        a stream-capable backend and a plan-resident stream (guarded plans
+        raise: a traced execution cannot fall back to the host rebuild).
+        """
+        from repro.core import jax_stream
+
+        # shape-only (tracer-safe) operand checks: the jitted gathers run
+        # with an in-bounds promise, so a short value array must raise
+        # here rather than read undefined memory
+        self.a.check_compatible(a_values)
+        self.b.check_compatible(b_values)
+        return jax_stream.stream_fn(self)(a_values, b_values)
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -393,31 +447,42 @@ def plan_spgemm(
         raise ValueError(
             f"unknown method {method!r}; one of {list(ALGORITHMS)} or a "
             "'spars-*/hash-*/h-*' family name")
+    contract = backends.get_backend(backend)
+    if method in contract.excluded_methods:
+        raise ValueError(
+            f"method {method!r} has no {contract.name} kernel family "
+            "(host-only)")
+    backends.check_method_knobs(contract, t, b_min, b_max)
+    if contract.canonical_method:
+        # jax: the numeric phase is the method-independent stream
+        # contraction, so every method *spelling* shares one canonical
+        # plan (plan.method reports the canonical form)
+        method = contract.canonical_method
     params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
     a_pat, b_pat = Pattern.of(a), Pattern.of(b)
 
-    if backend == "host":
-        pre = None
+    if backend == "pallas":
+        pre, layout = _plan_pallas(a, b, method, params, block_cols,
+                                   tile_cols)
+        return SpgemmPlan(method, "pallas", _freeze(params), a_pat, b_pat,
+                          pre, layout)
+    # stream-capable backends (host, jax) are pattern-only plans.  The jax
+    # backend never runs the naive oracles (contract.bit_exact_oracle is
+    # False), so it skips the blocking analysis they consume.
+    pre = None
+    if contract.bit_exact_oracle:
         if method.startswith(("spars", "hash")):
             pre = preprocess(a, b, t=np.inf, b_min=params["b_min"],
                              b_max=params["b_max"])
         elif method.startswith("h-"):
             pre = preprocess(a, b, t=params["t"], b_min=params["b_min"],
                              b_max=params["b_max"])
-        # resolve the guard now (it is a mutable module knob) so the plan's
-        # lazy stream build is deterministic no matter when it happens
-        limit = (_fast.STREAM_MAX_PRODUCTS if stream_limit is None
-                 else int(stream_limit))
-        return SpgemmPlan(method, "host", _freeze(params), a_pat, b_pat,
-                          pre, None, limit)
-    if backend != "pallas":
-        raise ValueError(f"unknown backend {backend!r}")
-    if method in HOST_ONLY:
-        raise ValueError(
-            f"method {method!r} has no Pallas kernel family (host-only)")
-    pre, layout = _plan_pallas(a, b, method, params, block_cols, tile_cols)
-    return SpgemmPlan(method, "pallas", _freeze(params), a_pat, b_pat,
-                      pre, layout)
+    # resolve the guard now (it is a mutable module knob) so the plan's
+    # lazy stream build is deterministic no matter when it happens
+    limit = (_fast.STREAM_MAX_PRODUCTS if stream_limit is None
+             else int(stream_limit))
+    return SpgemmPlan(method, backend, _freeze(params), a_pat, b_pat,
+                      pre, None, limit)
 
 
 # ---------------------------------------------------------------------------
@@ -445,7 +510,10 @@ class TilePlan:
 
     @property
     def method(self) -> str:
-        return self.plan.method
+        # report the candidate spelling the cost model chose: "jax" tiles
+        # (the device stream riding a host grid) carry an expand-method
+        # child plan on the jax backend
+        return "jax" if self.plan.backend == "jax" else self.plan.method
 
 
 @dataclasses.dataclass(frozen=True)
@@ -497,6 +565,13 @@ class TiledSpgemmPlan:
         multiply can hold many guard-sized tile streams at once.
         """
         seen = {id(t.plan): t.plan.stream_nbytes for t in self.tiles}
+        return sum(seen.values())
+
+    @property
+    def device_stream_nbytes(self) -> int:
+        """Device-resident stream bytes held via child tile plans (distinct
+        children counted once, as in :attr:`stream_nbytes`)."""
+        seen = {id(t.plan): t.plan.device_stream_nbytes for t in self.tiles}
         return sum(seen.values())
 
     @property
@@ -586,17 +661,16 @@ def plan_spgemm_tiled(
     """
     if a.n_cols != b.n_rows:
         raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
-    if backend not in ("host", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
+    contract = backends.get_backend(backend)
     cands = AUTO_CANDIDATES[backend] if candidates is None \
         else tuple(candidates)
     if not cands:
         raise ValueError("empty candidate set")
-    if backend == "pallas":
-        bad = [m for m in cands if m in HOST_ONLY]
-        if bad:
-            raise ValueError(
-                f"candidates {bad} have no Pallas kernel family (host-only)")
+    bad = [m for m in cands if m in contract.excluded_methods]
+    if bad:
+        raise ValueError(
+            f"candidates {bad} have no {contract.name} kernel family "
+            "(host-only)")
 
     k_width, n_width = normalize_tile_spec(tile)
     auto_k, auto_n = auto_tile_grid(a, b)
@@ -606,12 +680,15 @@ def plan_spgemm_tiled(
                 else nnz_balanced_col_bounds(b, auto_n))
 
     def _tile_plan(ta, tb, method):
+        # the "jax" candidate spelling = the device stream (DESIGN.md §10):
+        # its child plan is an expand-method plan on the jax backend, so a
+        # host grid can mix numpy tiles with device-stream tiles
+        meth, be = ("expand", "jax") if method == "jax" else (method, backend)
         if cache:
             from repro.core.api import _cached_plan
 
-            return _cached_plan(ta, tb, method, backend,
-                                resolve_params(method))
-        return plan_spgemm(ta, tb, method, backend=backend)
+            return _cached_plan(ta, tb, meth, be, resolve_params(meth))
+        return plan_spgemm(ta, tb, meth, backend=be)
 
     # A column blocks depend only on k: slice them once, not once per n block
     a_tiles = [csc_col_slice(a, int(k0), int(k1))
@@ -635,10 +712,12 @@ def plan_spgemm_tiled(
                 plan=_tile_plan(a_tile, b_tile, method)))
 
     params = (("candidates", cands),
-              # host-only: the guard steers per-tile method choices there;
-              # None on pallas so knob changes don't distinguish its plans
+              # stream-capable backends only: the guard steers per-tile
+              # method choices there; None on pallas so knob changes don't
+              # distinguish its plans
               ("stream_guard",
-               _fast.STREAM_MAX_PRODUCTS if backend == "host" else None),
+               _fast.STREAM_MAX_PRODUCTS if contract.carries_stream
+               else None),
               ("tile", (k_width, n_width)))
     return TiledSpgemmPlan(backend, Pattern.of(a), Pattern.of(b),
                            np.asarray(k_bounds, np.int64),

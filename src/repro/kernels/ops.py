@@ -127,6 +127,13 @@ def spgemm_pallas(
     skip the symbolic phase entirely.
     """
     del accumulator  # family is selected by the method name
+    from repro.core.backends import get_backend
+
+    contract = get_backend("pallas")
+    if method != "auto" and method in contract.excluded_methods:
+        raise ValueError(
+            f"method {method!r} has no {contract.name} kernel family "
+            "(host-only)")
     if tile is not None and (plan is not None or method != "auto"):
         raise ValueError(
             "tile= only applies to method='auto' without a held plan")

@@ -1,14 +1,24 @@
 """SparseFFN: pruned-weight FFN served through the paper's hybrid policy.
 
 The TPU re-targeting of H-SPA(t)/H-HASH(t) (DESIGN.md §3.1): the switching
-statistic is block-level density instead of per-column Op_j, and the two
+statistic is block-level density instead of per-column Op_j, and the
 execution regimes are
   * dense path  — plain MXU matmul (the SPA analogue: dense accumulator,
     throughput-optimal when most blocks are present), chosen when the kept-
     block fraction >= ``t_density``;
   * sparse path — the BSR Pallas kernel (kernels/bsr_spmm.py), which skips
     absent blocks entirely (the SPARS/HASH analogue), chosen for sparser
-    weights.
+    weights;
+  * spgemm path — the *differentiable* re-targeting (DESIGN.md §10): the
+    pruned weight is stored as an element-level CSC whose values are
+    trainable, activations ride as dense-pattern CSC value arrays, and the
+    multiply is the cached SpGEMM plan's device stream
+    (``core.jax_stream``) — jit-compatible and reverse-differentiable, so a
+    sparse FFN can *train* with SpGEMM inside the traced step
+    (``training.train_loop.build_sparse_ffn_train_step``).  Opt-in via
+    ``path="spgemm"``; weight patterns are static across steps (pruned at
+    conversion time), so each distinct token count plans once and every
+    later step is a pure compiled replay.
 
 ``from_dense`` prunes by block magnitude to a target density. The policy is
 per-matrix, decided at conversion time (weights are static at serving time,
@@ -18,29 +28,58 @@ exactly like the paper's pre-processing phase).
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.bsr_spmm import bsr_from_dense, bsr_spmm
+from repro.sparse.format import CSC, csc_from_dense
 
 
 @dataclasses.dataclass
 class SparseMatmul:
     """One pruned weight matrix with its chosen execution path."""
 
-    path: str                   # "dense" | "bsr"
+    path: str                   # "dense" | "bsr" | "spgemm"
     dense_w: jax.Array | None
     block_idx: jax.Array | None
     block_nnz: jax.Array | None
     blocks: jax.Array | None
     shape: tuple
     density: float
+    w_csc: CSC | None = None    # spgemm path: static pattern, jnp values
+    #: spgemm path: per-plan plan-memory-guard override (products); large
+    #: FFNs * long token blocks exceed the global default, and mutating
+    #: fast.STREAM_MAX_PRODUCTS would re-key every cached plan
+    stream_limit: int | None = None
+    # spgemm path: per-token-count SpGEMM plan + densify indices, resolved
+    # once at trace time.  A bounded LRU: each entry pins a plan (host +
+    # device stream, O(nnz_w * N)) past plan-LRU eviction, so workloads
+    # cycling through many distinct token counts must not accumulate them
+    _spgemm_memo: "OrderedDict" = dataclasses.field(
+        default_factory=OrderedDict, repr=False)
+
+    SPGEMM_MEMO_SIZE = 8        # distinct token counts held per matrix
 
     @classmethod
     def from_dense(cls, w, *, bm=8, bk=8, keep_density=0.5,
-                   t_density=0.75) -> "SparseMatmul":
+                   t_density=0.75, path: str | None = None,
+                   stream_limit: int | None = None) -> "SparseMatmul":
+        """Prune ``w`` by block magnitude and pick an execution path.
+
+        ``path=None`` applies the serving policy (dense above ``t_density``,
+        BSR below); ``path="spgemm"`` forces the differentiable CSC/SpGEMM
+        path (DESIGN.md §10), whose values are trainable; ``"dense"`` /
+        ``"bsr"`` force the serving paths.  ``stream_limit`` raises this
+        matrix's plan-memory guard (the spgemm path's stream holds
+        ``nnz_w * tokens`` products, which outgrows the global default at
+        large FFN sizes) without touching the global knob.
+        """
+        if path not in (None, "dense", "bsr", "spgemm"):
+            raise ValueError(
+                f"unknown path {path!r}; None, 'dense', 'bsr' or 'spgemm'")
         w = np.asarray(w, np.float32)
         m, k = w.shape
         n_rb, n_cb = m // bm, k // bk
@@ -51,17 +90,95 @@ class SparseMatmul:
         pruned = np.where((norms >= thresh)[:, :, None, None], tiles, 0.0)
         w_pruned = pruned.transpose(0, 2, 1, 3).reshape(m, k)
         density = float((norms >= thresh).mean())
-        if density >= t_density:   # paper's hybrid switch: stay dense (SPA)
+        if path == "spgemm":
+            csc = csc_from_dense(w_pruned)
+            csc = CSC(jnp.asarray(np.asarray(csc.values, np.float32)),
+                      csc.row_indices, csc.col_ptr, csc.shape)
+            return cls("spgemm", None, None, None, None, (m, k), density,
+                       w_csc=csc, stream_limit=stream_limit)
+        if path == "dense" or (path is None and density >= t_density):
+            # paper's hybrid switch: stay dense (SPA)
             return cls("dense", jnp.asarray(w_pruned), None, None, None,
                        (m, k), density)
         bi, bn, blocks = bsr_from_dense(w_pruned, bm, bk)
         return cls("bsr", None, jnp.asarray(bi), jnp.asarray(bn),
                    jnp.asarray(blocks), (m, k), density)
 
+    # -- spgemm path (DESIGN.md §10) -------------------------------------
+
+    @property
+    def w_values(self) -> jax.Array:
+        """Trainable weight values (spgemm path): the CSC value array."""
+        if self.path != "spgemm":
+            raise ValueError(
+                f"w_values is the spgemm path's parameter array "
+                f"(this matmul runs path={self.path!r})")
+        return self.w_csc.values
+
+    def _spgemm_plan(self, n: int):
+        """Plan W @ X for X dense [K, N], memoized per token count.
+
+        The activation operand is a *fully dense* pattern — its structure
+        depends only on (K, N), so the symbolic phase runs once per
+        distinct N (at trace time) and the numeric phase is the plan's
+        jitted device stream.  Returns ``(plan, scatter_rows,
+        scatter_cols)`` where the scatter indices densify the canonical
+        CSC result into ``[M, N]`` (plan-static numpy, free under jit).
+        """
+        if n in self._spgemm_memo:
+            self._spgemm_memo.move_to_end(n)
+            return self._spgemm_memo[n]
+        from repro.core.api import cached_plan
+
+        m, k = self.shape
+        x_pat = CSC(np.zeros(k * n, np.float32),
+                    np.tile(np.arange(k, dtype=np.int32), n),
+                    np.arange(n + 1, dtype=np.int32) * k, (k, n))
+        w_pat = CSC(np.zeros(self.w_csc.nnz, np.float32),
+                    self.w_csc.row_indices, self.w_csc.col_ptr,
+                    self.shape)
+        plan = cached_plan(w_pat, x_pat, "expand", backend="jax",
+                           stream_limit=self.stream_limit)
+        s = plan.stream
+        if s is None:
+            raise ValueError(
+                "spgemm-path weight stream exceeds the plan-memory guard; "
+                "pass stream_limit= to from_dense/from_params (per-plan "
+                "override) or shrink the token block")
+        cols = np.repeat(np.arange(n, dtype=np.int32),
+                         np.diff(s.c_col_ptr))
+        self._spgemm_memo[n] = (plan, s.c_rows, cols)
+        while len(self._spgemm_memo) > self.SPGEMM_MEMO_SIZE:
+            self._spgemm_memo.popitem(last=False)
+        return self._spgemm_memo[n]
+
+    def apply_values(self, w_values, x):
+        """y [M, N] = W @ x for trainable values ``w_values`` (spgemm path).
+
+        Pure and jit/grad/vmap-compatible: ``w_values`` and ``x`` may be
+        tracers; the plan lookup keys only on ``x``'s static shape.
+        Column-major flattening turns the dense activations into the CSC
+        value array of the plan's dense B pattern, and the plan's canonical
+        result scatters back to dense through plan-static indices.
+        """
+        if self.path != "spgemm":
+            raise ValueError(
+                f"apply_values needs path='spgemm' (got {self.path!r})")
+        n = x.shape[1]
+        plan, rows, cols = self._spgemm_plan(int(n))
+        c_vals = plan.stream_apply(w_values, x.T.reshape(-1))
+        # plan-static, unique, in-bounds scatter indices: skip XLA's
+        # bounds-check/dup handling (same rationale as the stream gathers)
+        return jnp.zeros(self.shape[0:1] + (int(n),), c_vals.dtype).at[
+            rows, cols].set(c_vals, mode="promise_in_bounds",
+                            unique_indices=True)
+
     def __call__(self, x, *, bn=None, interpret=True):
         """y = W @ x for x [K, N]."""
         if self.path == "dense":
             return self.dense_w @ x
+        if self.path == "spgemm":
+            return self.apply_values(self.w_values, x)
         n = x.shape[1]
         bn = bn or min(128, n)
         return bsr_spmm(self.block_idx, self.block_nnz, self.blocks, x,
@@ -78,6 +195,10 @@ class SparseMatmul:
         """
         if self.path == "dense":
             return self.dense_w @ xs              # broadcasts over the batch
+        if self.path == "spgemm":
+            # same-pattern batched regime: the plan's vmapped device stream
+            return jax.vmap(
+                lambda x: self.apply_values(self.w_values, x))(xs)
         n = xs.shape[2]
         bn = bn or min(128, n)
         f = lambda x: bsr_spmm(self.block_idx, self.block_nnz, self.blocks,
@@ -89,6 +210,8 @@ class SparseMatmul:
         m, k = self.shape
         if self.path == "dense":
             return 2 * m * k
+        if self.path == "spgemm":
+            return 2 * self.w_csc.nnz
         nb = int(np.asarray(self.block_nnz).sum())
         bm, bk = self.blocks.shape[2], self.blocks.shape[3]
         return 2 * nb * bm * bk
@@ -103,11 +226,43 @@ class SparseFFN:
     down: SparseMatmul
 
     @classmethod
-    def from_params(cls, p, *, keep_density=0.4, t_density=0.75, bm=8, bk=8):
+    def from_params(cls, p, *, keep_density=0.4, t_density=0.75, bm=8, bk=8,
+                    path: str | None = None,
+                    stream_limit: int | None = None):
         mk = lambda w: SparseMatmul.from_dense(
             np.asarray(w).T, bm=bm, bk=bk, keep_density=keep_density,
-            t_density=t_density)
+            t_density=t_density, path=path, stream_limit=stream_limit)
         return cls(mk(p["gate"]["w"]), mk(p["up"]["w"]), mk(p["down"]["w"]))
+
+    # -- differentiable spgemm path (DESIGN.md §10) ----------------------
+
+    def trainable_params(self) -> dict:
+        """The trainable weight-value pytree of an all-spgemm-path FFN."""
+        mats = {"gate": self.gate, "up": self.up, "down": self.down}
+        bad = [k for k, m in mats.items() if m.path != "spgemm"]
+        if bad:
+            raise ValueError(
+                f"trainable_params needs every matmul on path='spgemm' "
+                f"(convert with from_params(..., path='spgemm')); "
+                f"{bad} are not")
+        return {k: m.w_values for k, m in mats.items()}
+
+    def apply(self, params, x):
+        """Functional forward pass: ``params`` override the stored values.
+
+        ``x`` is ``[T, D]`` (or a batch ``[B, T, D]``); the three matmuls
+        run the differentiable SpGEMM stream with ``params['gate'/'up'/
+        'down']`` as the weight values, so ``jax.grad`` of anything
+        downstream reaches the sparse weights (the values of a *fixed*
+        pruned pattern — structure never re-derives during training,
+        exactly the paper's static pre-processing contract).
+        """
+        if x.ndim == 3:
+            return jax.vmap(lambda xb: self.apply(params, xb))(x)
+        xt = x.T                                   # [D, T]
+        h = (jax.nn.silu(self.gate.apply_values(params["gate"], xt))
+             * self.up.apply_values(params["up"], xt))
+        return self.down.apply_values(params["down"], h).T
 
     def __call__(self, x):
         """x [T, D] -> [T, D], or a batch [B, T, D] -> [B, T, D].

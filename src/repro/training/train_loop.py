@@ -99,6 +99,41 @@ def init_train_state(model_cfg, tc: TrainConfig, key, dtype=jnp.float32):
     return {"params": params, "opt": adamw_init(params, tc.opt)}
 
 
+def build_sparse_ffn_train_step(ffn, *, lr: float = 1e-3,
+                                opt: AdamWConfig = AdamWConfig(),
+                                loss_fn=None):
+    """Jitted sparse-FFN training step with SpGEMM inside the trace.
+
+    ``ffn`` is a :class:`~repro.models.sparse_ffn.SparseFFN` whose matmuls
+    run the differentiable spgemm path (``from_params(..., path="spgemm")``,
+    DESIGN.md §10).  Returns ``(step, state)`` where ``step(state, (x, y))
+    -> (state, metrics)`` is a single ``jax.jit``: forward (three SpGEMM
+    device-stream replays per token block), loss (MSE by default; pass
+    ``loss_fn(pred, y)`` to override), reverse pass (each stream's custom
+    vjp — two more replays through the same frozen indices), and an AdamW
+    update of the sparse weight *values*.  The weight patterns are static,
+    so the first call per activation shape plans + traces once and every
+    later step is a compiled replay — zero per-step Python plan traversal.
+    """
+    params = ffn.trainable_params()
+    state = {"params": params, "opt": adamw_init(params, opt)}
+    loss_fn = loss_fn or (lambda pred, y: jnp.mean((pred - y) ** 2))
+
+    def objective(p, batch):
+        x, y = batch
+        return loss_fn(ffn.apply(p, x), y)
+
+    @jax.jit
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(objective)(state["params"], batch)
+        new_params, new_opt = adamw_update(grads, state["opt"],
+                                           state["params"], opt, lr)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss.astype(jnp.float32)})
+
+    return step, state
+
+
 class Trainer:
     """Host loop with the fault-tolerance drill (E11)."""
 

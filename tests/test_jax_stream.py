@@ -1,0 +1,434 @@
+"""Device-resident stream backend (core/jax_stream.py, DESIGN.md §10):
+differential equivalence vs the host stream and the naive oracles on the
+adversarial harness, gradient checks (custom vjp vs finite differences and
+vs a dense ``jnp.matmul`` oracle), vmap-vs-looped bit-identity, cached-trace
+steady state (zero retrace after warmup), guard fallback/capability errors,
+fingerprint validation on the stream engines, the backend capability
+registry, and the differentiable SparseFFN training path."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import bit_identical
+from test_differential import CASES, _adversarial, oracle_product
+
+from repro.core import (
+    backend_names,
+    get_backend,
+    plan_cache_clear,
+    plan_cache_info,
+    plan_spgemm,
+    plan_spgemm_tiled,
+    spgemm,
+    spgemm_batched,
+)
+from repro.core import jax_stream
+from repro.core.cost import CostConstants, choose_method
+from repro.sparse import BatchedCSC, random_powerlaw_csc
+from repro.sparse.format import CSC, csc_from_dense, csc_to_dense
+
+F32 = np.float32
+
+
+def _integerize(m: CSC, seed: int = 0) -> CSC:
+    """Same pattern, small-integer values: every f32 sum is exact, so the
+    device stream must agree with the f64 naive oracles with atol=0."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(1, 4, size=m.nnz).astype(np.float64)
+    return CSC(vals, m.row_indices, m.col_ptr, m.shape)
+
+
+def _stored_coords(m: CSC):
+    """(rows, cols) of every stored element, in storage order."""
+    cp = np.asarray(m.col_ptr)
+    rows = np.asarray(m.row_indices)[: m.nnz]
+    cols = np.repeat(np.arange(m.n_cols, dtype=np.int32), np.diff(cp))
+    return rows, cols
+
+
+# --- differential: jax stream vs host stream vs oracles ---------------------
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_jax_vs_host_stream_and_oracle(case):
+    """backend="jax" computes the same C as the host stream engine and the
+    external oracle on every adversarial pattern (f32 tolerance)."""
+    a, b = _adversarial(case)
+    pj = plan_spgemm(a, b, "expand", backend="jax")
+    ph = plan_spgemm(a, b, "expand")
+    cj = pj.execute(a, b)
+    ch = ph.execute(a, b, engine="stream")
+    # canonical structure is shared with the host stream bit-for-bit
+    assert np.array_equal(np.asarray(cj.col_ptr), np.asarray(ch.col_ptr))
+    assert np.array_equal(np.asarray(cj.row_indices)[: cj.nnz],
+                          np.asarray(ch.row_indices)[: ch.nnz])
+    np.testing.assert_allclose(
+        np.asarray(cj.values), np.asarray(ch.values)[: ch.nnz],
+        rtol=1e-5, atol=1e-6,
+        err_msg=f"jax stream diverged from the host stream on {case!r}")
+    np.testing.assert_allclose(
+        csc_to_dense(cj.to_host()), oracle_product(a, b),
+        rtol=1e-4, atol=1e-5,
+        err_msg=f"jax stream diverged from the oracle on {case!r}")
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_jax_integer_exact_vs_naive_oracles(case):
+    """With exactly-representable values the device stream matches the f64
+    naive oracles with atol=0 (no rounding anywhere, so f32 vs f64 and any
+    re-association are invisible)."""
+    a, b = _adversarial(case)
+    a, b = _integerize(a, 1), _integerize(b, 2)
+    cj = plan_spgemm(a, b, "expand", backend="jax").execute(a, b)
+    for method in ("spa", "expand", "h-hash-256/256"):
+        cn = plan_spgemm(a, b, method).execute(a, b, engine="naive")
+        np.testing.assert_array_equal(
+            csc_to_dense(cj.to_host()), csc_to_dense(cn),
+            err_msg=f"jax stream != naive {method} on integer {case!r}")
+
+
+def test_api_spellings_reach_the_jax_backend():
+    a = random_powerlaw_csc(24, 2.0, seed=3)
+    ref = csc_to_dense(spgemm(a, a, method="expand", cache=False))
+    c = spgemm(a, a, method="expand", backend="jax", cache=False)
+    np.testing.assert_allclose(csc_to_dense(c.to_host()), ref,
+                               rtol=1e-5, atol=1e-6)
+    # engine="stream" is the jax backend's (only) engine; explicit works
+    c2 = spgemm(a, a, method="expand", backend="jax", engine="stream",
+                cache=False)
+    np.testing.assert_allclose(csc_to_dense(c2.to_host()), ref,
+                               rtol=1e-5, atol=1e-6)
+
+
+# --- gradients --------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", ("random", "dup_heavy", "single_row",
+                                  "rect_chain"))
+def test_grad_matches_finite_differences(case):
+    """jax.grad of sum(C.values) w.r.t. both operands' values matches
+    central finite differences on the adversarial patterns."""
+    a, b = _adversarial(case)
+    plan = plan_spgemm(a, b, "expand", backend="jax")
+    av = np.asarray(a.values)[: a.nnz].astype(F32)
+    bv = np.asarray(b.values)[: b.nnz].astype(F32)
+
+    def loss(x, y):
+        return jnp.sum(plan.stream_apply(x, y))
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(jnp.asarray(av),
+                                            jnp.asarray(bv))
+    assert ga.shape == av.shape and gb.shape == bv.shape
+    rng = np.random.default_rng(0)
+    eps = 1e-2
+    for arr, grad, which in ((av, ga, 0), (bv, gb, 1)):
+        for i in rng.choice(len(arr), size=min(4, len(arr)), replace=False):
+            hi, lo = arr.copy(), arr.copy()
+            hi[i] += eps
+            lo[i] -= eps
+            args_hi = (hi, bv) if which == 0 else (av, hi)
+            args_lo = (lo, bv) if which == 0 else (av, lo)
+            fd = (float(loss(*map(jnp.asarray, args_hi)))
+                  - float(loss(*map(jnp.asarray, args_lo)))) / (2 * eps)
+            np.testing.assert_allclose(
+                float(grad[i]), fd, rtol=5e-2, atol=5e-3,
+                err_msg=f"fd mismatch at {which}/{i} on {case!r}")
+
+
+@pytest.mark.parametrize("case", ("random", "dup_heavy", "rect_chain"))
+def test_grad_matches_dense_matmul_oracle(case):
+    """Every product lands in a stored C slot, so sum(C.values) equals
+    sum(A_dense @ B_dense) — and the stream's vjp must equal the dense
+    matmul gradient gathered at the stored positions."""
+    a, b = _adversarial(case)
+    plan = plan_spgemm(a, b, "expand", backend="jax")
+    av = jnp.asarray(np.asarray(a.values)[: a.nnz].astype(F32))
+    bv = jnp.asarray(np.asarray(b.values)[: b.nnz].astype(F32))
+    ga, gb = jax.grad(lambda x, y: jnp.sum(plan.stream_apply(x, y)),
+                      argnums=(0, 1))(av, bv)
+
+    ar, ac = _stored_coords(a)
+    br, bc = _stored_coords(b)
+
+    def dense_loss(x, y):
+        ad = jnp.zeros(a.shape, F32).at[ar, ac].set(x)
+        bd = jnp.zeros(b.shape, F32).at[br, bc].set(y)
+        return jnp.sum(ad @ bd)
+
+    da, db = jax.grad(dense_loss, argnums=(0, 1))(av, bv)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(da),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(db),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --- vmap batched path ------------------------------------------------------
+
+
+def test_vmap_batched_bit_identical_to_looped():
+    a = random_powerlaw_csc(36, 3.0, seed=4)
+    plan = plan_spgemm(a, a, "expand", backend="jax")
+    rng = np.random.default_rng(5)
+    vals = rng.normal(size=(5, a.nnz)).astype(F32)
+    stats = {}
+    batched = plan.execute_batched(vals, vals, stats=stats)
+    assert stats["path"] == "vmap" and stats["batch"] == 5
+    looped = [plan.execute(vals[i], vals[i]) for i in range(5)]
+    for x, y in zip(batched, looped):
+        assert np.array_equal(np.asarray(x.values), np.asarray(y.values))
+        assert x.row_indices is y.row_indices  # shared frozen structure
+
+
+def test_spgemm_batched_rides_the_jax_backend():
+    a = random_powerlaw_csc(30, 2.5, seed=6)
+    rng = np.random.default_rng(7)
+    ab = BatchedCSC.from_values(a, rng.normal(size=(3, a.nnz)).astype(F32))
+    got = spgemm_batched(ab, ab, method="expand", backend="jax",
+                         engine="stream", cache=False)
+    want = [spgemm(ab[i], ab[i], method="expand", cache=False)
+            for i in range(3)]
+    for x, y in zip(got, want):
+        np.testing.assert_allclose(
+            csc_to_dense(x.to_host()), csc_to_dense(y),
+            rtol=1e-5, atol=1e-6)
+
+
+# --- cached-trace steady state ---------------------------------------------
+
+
+def test_zero_retrace_after_warmup():
+    """Same-shape executions replay one compiled trace — the per-step
+    Python work after warmup is one dispatch, not a plan traversal."""
+    a = random_powerlaw_csc(28, 2.5, seed=8)
+    plan = plan_spgemm(a, a, "expand", backend="jax")
+    fn = jax_stream.stream_fn(plan)
+    assert jax_stream.stream_fn(plan) is fn          # memoized on the plan
+    rng = np.random.default_rng(9)
+    for _ in range(4):
+        v = rng.normal(size=a.nnz).astype(F32)
+        fn(v, v)
+    assert fn._cache_size() == 1
+    # the batched fn is its own single trace per batch shape
+    bfn = jax_stream.stream_fn_batched(plan)
+    for _ in range(3):
+        v = rng.normal(size=(6, a.nnz)).astype(F32)
+        bfn(v, v)
+    assert bfn._cache_size() == 1
+
+
+# --- guard fallback and capability errors -----------------------------------
+
+
+def test_guarded_plan_falls_back_to_host_engine():
+    a = random_powerlaw_csc(40, 3.0, seed=10)
+    guarded = plan_spgemm(a, a, "expand", backend="jax", stream_limit=1)
+    full_host = plan_spgemm(a, a, "expand")
+    stats = {}
+    c = guarded.execute(a, a, stats=stats)
+    assert stats["fallback"] == "host" and stats["backend"] == "jax"
+    assert bit_identical(c, full_host.execute(a, a, engine="stream"))
+    # batched fallback too
+    vals = np.random.default_rng(11).normal(size=(3, a.nnz))
+    for x, y in zip(guarded.execute_batched(vals, vals),
+                    full_host.execute_batched(vals, vals,
+                                              engine="stream")):
+        assert bit_identical(x, y)
+
+
+def test_guarded_plan_raises_under_trace():
+    a = random_powerlaw_csc(24, 2.5, seed=12)
+    guarded = plan_spgemm(a, a, "expand", backend="jax", stream_limit=1)
+    vals = jnp.asarray(np.asarray(a.values)[: a.nnz].astype(F32))
+    with pytest.raises(ValueError, match="guard"):
+        jax.jit(lambda v: guarded.stream_apply(v, v))(vals)
+    with pytest.raises(ValueError, match="guard"):
+        jax.grad(lambda v: jnp.sum(
+            jax_stream.execute_jax(guarded, v, v).values))(vals)
+
+
+# --- fingerprint validation on the stream engines (host + jax) --------------
+
+
+def _colliding_pair(n=16):
+    a = csc_from_dense(np.eye(n))
+    b = csc_from_dense(np.roll(np.eye(n), 1, axis=0))
+    assert a.shape == b.shape and a.nnz == b.nnz
+    return a, b
+
+
+@pytest.mark.parametrize("backend, engine", [("host", "stream"),
+                                             ("jax", None)])
+def test_validate_fingerprint_covers_stream_engines(backend, engine):
+    a, corrupt = _colliding_pair()
+    plan = plan_spgemm(a, a, "expand", backend=backend)
+    plan.execute(corrupt, corrupt, engine=engine)   # O(1) hole: accepted
+    with pytest.raises(ValueError, match="fingerprint"):
+        plan.execute(corrupt, corrupt, engine=engine,
+                     validate="fingerprint")
+    ok = plan.execute(a, a, engine=engine, validate="fingerprint")
+    assert ok.shape == (16, 16)
+    # batched stream paths validate identically
+    bad = BatchedCSC.stack([corrupt, corrupt])
+    with pytest.raises(ValueError, match="fingerprint"):
+        plan.execute_batched(bad, bad, engine=engine,
+                             validate="fingerprint")
+    good = BatchedCSC.stack([a, a])
+    plan.execute_batched(good, good, engine=engine,
+                         validate="fingerprint")
+
+
+# --- engine plumbing and the capability registry ----------------------------
+
+
+def test_engine_capability_errors():
+    a = random_powerlaw_csc(20, 2.0, seed=13)
+    pj = plan_spgemm(a, a, "expand", backend="jax")
+    with pytest.raises(ValueError, match="unknown engine"):
+        pj.execute(a, a, engine="bogus")
+    # the jax backend has no naive oracles (bit_exact_oracle=False)
+    with pytest.raises(ValueError, match="naive"):
+        pj.execute(a, a, engine="naive")
+    with pytest.raises(ValueError, match="naive"):
+        pj.execute_batched(np.stack([np.asarray(a.values)] * 2),
+                           np.stack([np.asarray(a.values)] * 2),
+                           engine="naive")
+    # uniform spelling across the api entry points
+    ab = BatchedCSC.stack([a, a])
+    with pytest.raises(ValueError, match="naive"):
+        spgemm_batched(ab, ab, method="expand", backend="jax",
+                       engine="naive", cache=False)
+    with pytest.raises(ValueError, match="host-backend"):
+        spgemm(a, a, method="spa", backend="pallas", engine="stream",
+               cache=False)
+
+
+def test_backend_registry_contracts():
+    assert set(backend_names()) >= {"host", "pallas", "jax"}
+    host, pallas, jx = (get_backend(n) for n in ("host", "pallas", "jax"))
+    assert host.bit_exact_oracle and not host.supports_grad
+    assert jx.supports_grad and jx.device_resident and jx.carries_stream
+    assert not pallas.carries_stream and pallas.cost_domain == "relative"
+    assert "expand" in pallas.excluded_methods
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("cuda")
+    with pytest.raises(ValueError, match="unknown backend"):
+        spgemm(random_powerlaw_csc(8, 1.0, seed=0),
+               random_powerlaw_csc(8, 1.0, seed=0), backend="cuda")
+
+
+def test_jax_method_spellings_share_one_canonical_plan():
+    """The jax numeric phase is method-independent, so every method
+    spelling must collapse to one canonical plan (one LRU entry, one
+    host+device stream) instead of per-spelling duplicates."""
+    plan_cache_clear()
+    a = random_powerlaw_csc(26, 2.5, seed=18)
+    from repro.core.api import _cached_plan
+    from repro.core.planner import resolve_params
+
+    p1 = _cached_plan(a, a, "expand", "jax", {})
+    p2 = _cached_plan(a, a, "spa", "jax", {})
+    p3 = _cached_plan(a, a, "h-hash-256/256", "jax",
+                      resolve_params("h-hash-256/256"))
+    assert p1 is p2 is p3 and p1.method == "expand"
+    assert plan_cache_info()["size"] == 1
+    assert plan_spgemm(a, a, "spa", backend="jax").method == "expand"
+    # the public accessor shares the same LRU entry
+    from repro.core import cached_plan
+
+    assert cached_plan(a, a, "spa", backend="jax") is p1
+    # explicit oracle-tuning knobs are rejected loudly, not discarded
+    for fn in (lambda: spgemm(a, a, "h-hash-256/256", backend="jax",
+                              b_min=8, cache=False),
+               lambda: plan_spgemm(a, a, "h-hash-256/256", backend="jax",
+                                   b_min=8),
+               lambda: cached_plan(a, a, "h-hash-256/256", backend="jax",
+                                   b_min=8)):
+        with pytest.raises(ValueError, match="do not apply"):
+            fn()
+    # ...but a named method whose *defaults* carry knobs still collapses
+    assert spgemm(a, a, "h-hash-256/256", backend="jax",
+                  cache=False).nnz == p1.execute(a, a).nnz
+    plan_cache_clear()
+
+
+def test_stream_apply_on_streamless_backend_names_the_capability():
+    a = random_powerlaw_csc(20, 2.0, seed=19)
+    pallas_plan = plan_spgemm(a, a, "spa", backend="pallas")
+    with pytest.raises(ValueError, match="carries no product stream"):
+        pallas_plan.stream_apply(np.asarray(a.values),
+                                 np.asarray(a.values))
+
+
+def test_stream_apply_checks_operand_shapes():
+    """The jitted gathers promise in-bounds indices, so short operands
+    must be rejected before tracing, tracer-safely."""
+    a = random_powerlaw_csc(22, 2.0, seed=20)
+    plan = plan_spgemm(a, a, "expand", backend="jax")
+    with pytest.raises(ValueError, match="values"):
+        plan.stream_apply(np.zeros(2, F32), np.zeros(a.nnz, F32))
+    with pytest.raises(ValueError, match="1-D"):
+        plan.stream_apply(np.zeros((2, a.nnz), F32), np.zeros(a.nnz, F32))
+
+
+def test_device_stream_bytes_reported_separately():
+    plan_cache_clear()
+    a = random_powerlaw_csc(32, 3.0, seed=14)
+    spgemm(a, a, method="expand", cache=True)              # host stream
+    info = plan_cache_info()
+    assert info["stream_bytes"] > 0 and info["device_stream_bytes"] == 0
+    spgemm(a, a, method="expand", backend="jax", cache=True)
+    info = plan_cache_info()
+    assert info["device_stream_bytes"] > 0
+    # the jax plan keeps the host stream it was lifted from (both halves)
+    assert info["stream_bytes"] > 0
+    plan_cache_clear()
+
+
+# --- the "jax" auto candidate (mixed tile grids) ----------------------------
+
+
+def test_tiled_jax_candidate_executes_and_matches():
+    a = _integerize(random_powerlaw_csc(40, 3.0, seed=15), 16)
+    ref = csc_to_dense(plan_spgemm(a, a, "spa").execute(a, a))
+    plan = plan_spgemm_tiled(a, a, tile=(20, 20), candidates=("jax",),
+                             cache=False)
+    stats = {}
+    c = plan.execute(a, a, stats=stats)
+    assert stats["methods"] == ["jax"]
+    np.testing.assert_array_equal(csc_to_dense(c), ref)
+    # an explicit engine must hold on every tile: "stream" does (host and
+    # jax tiles both implement it), "naive" does not (device tiles cannot
+    # keep its bit-exact f64 promise) and is loudly rejected
+    mixed = plan_spgemm_tiled(a, a, tile=(20, 20),
+                              candidates=("spa", "jax"), cache=False)
+    for engine in (None, "stream"):
+        np.testing.assert_array_equal(
+            csc_to_dense(mixed.execute(a, a, engine=engine)), ref)
+    with pytest.raises(ValueError, match="every tile"):
+        mixed.execute(a, a, engine="naive")
+    with pytest.raises(ValueError, match="every tile"):
+        mixed.execute_batched(np.stack([np.asarray(a.values)] * 2),
+                              np.stack([np.asarray(a.values)] * 2),
+                              engine="naive")
+    outs = mixed.execute_batched(
+        np.stack([np.asarray(a.values)] * 2),
+        np.stack([np.asarray(a.values)] * 2), engine="stream")
+    np.testing.assert_array_equal(csc_to_dense(outs[0]), ref)
+
+
+def test_cost_model_can_pick_the_jax_candidate():
+    """With device-favourable calibrated constants the auto chooser picks
+    the jax stream for in-guard tiles (deterministic via constants=)."""
+    from repro.sparse.stats import tile_stats
+
+    a = random_powerlaw_csc(48, 4.0, seed=17)
+    st = tile_stats(a, a)
+    fast_dev = CostConstants(jax_base=1e-7, jax_prod=1e-10)
+    assert choose_method(st, "host", candidates=("spa", "expand", "jax"),
+                         constants=fast_dev) == "jax"
+    slow_dev = CostConstants(jax_base=10.0, jax_prod=1.0)
+    assert choose_method(st, "host", candidates=("spa", "expand", "jax"),
+                         constants=slow_dev) != "jax"

@@ -311,9 +311,15 @@ def test_cost_model_candidate_restriction_and_errors():
 
 
 def test_auto_candidates_are_valid_methods():
+    from repro.core import backend_names
+
+    assert sorted(AUTO_CANDIDATES) == sorted(backend_names())
     for backend, cands in AUTO_CANDIDATES.items():
         for m in cands:
-            assert m in ALGORITHMS or m.startswith(("spars", "hash", "h-"))
+            # "jax" is the cross-backend candidate spelling: the device
+            # stream riding a tile grid (DESIGN.md §10)
+            assert (m in ALGORITHMS or m == "jax"
+                    or m.startswith(("spars", "hash", "h-")))
 
 
 # --- argument validation ---------------------------------------------------
