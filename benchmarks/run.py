@@ -1,9 +1,9 @@
 """Benchmark entry point: one section per paper table/figure + kernel bench.
 
 PYTHONPATH=src python -m benchmarks.run [--only table1,fig34,fig5,kernels]
-Prints CSV per section. The dry-run/roofline harness is separate
-(repro.launch.dryrun / benchmarks.roofline) because it needs the 512-device
-XLA flag set before jax initializes.
+Prints CSV per section.  The roofline section runs the SpGEMM engine
+roofline (``benchmarks/roofline.py``): per-engine achieved fraction of the
+measured memory-bandwidth bound.
 """
 
 from __future__ import annotations
@@ -56,19 +56,15 @@ def main() -> None:
         beyond.run()
         print(f"# beyond done in {time.time()-t0:.0f}s\n", flush=True)
     if want("roofline"):
-        import glob
+        print("# === E8: SpGEMM engine roofline (fractions of the "
+              "bandwidth bound) ===")
         import os
 
-        if glob.glob(os.path.join(
-                os.environ.get("REPRO_CACHE", ".cache"),
-                "dryrun", "*.json")):
-            print("# === E8: roofline (single-pod artifacts) ===")
-            from benchmarks import roofline
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        import roofline
 
-            roofline.run("16x16", csv=True)
-            print(f"# roofline done in {time.time()-t0:.0f}s\n", flush=True)
-        else:
-            print("# roofline skipped (run repro.launch.dryrun --all first)")
+        roofline.run()
+        print(f"# roofline done in {time.time()-t0:.0f}s\n", flush=True)
     if want("wallclock"):
         print("# === host-executor wall-clock sanity (CPU, not the paper's "
               "metric) ===")

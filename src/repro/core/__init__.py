@@ -42,7 +42,13 @@ from repro.core.fast import ProductStream, build_product_stream
 # contract alone does not wire executors/candidates, so it is not a public
 # extension point (see core/backends.py)
 from repro.core.backends import ExecutionContract, backend_names, get_backend
-from repro.core.jax_stream import DeviceStream, device_stream, stream_fn
+from repro.core.jax_stream import (
+    DeviceStream,
+    bilinear_custom_vjp,
+    device_stream,
+    stream_fn,
+)
+from repro.core.pallas_stream import FusedStream, fused_fn, fused_stream
 from repro.core.executor import execute as execute_plan
 from repro.core.executor import execute_batched as execute_plan_batched
 from repro.core.executor import execute_tiled, execute_tiled_batched
@@ -93,8 +99,12 @@ __all__ = [
     "backend_names",
     "get_backend",
     "DeviceStream",
+    "bilinear_custom_vjp",
     "device_stream",
     "stream_fn",
+    "FusedStream",
+    "fused_fn",
+    "fused_stream",
     "resolve_engine",
     "cached_plan",
     "plan_cache_clear",

@@ -66,7 +66,10 @@ def plan_cache_info() -> dict:
     plans' child tile plans (each counted once even when shared) — see
     DESIGN.md §9.  ``device_stream_bytes`` separately totals the
     device-resident index arrays jax-backend plans cache alongside the host
-    ones (DESIGN.md §10).  The guard bounds each *plan's* stream; the LRU
+    ones (DESIGN.md §10), and ``fused_stream_bytes`` the fused-kernel
+    replay views (padded gather indices + segment metadata,
+    ``core.pallas_stream``, DESIGN.md §11) — all three can be resident on
+    one plan at once.  The guard bounds each *plan's* stream; the LRU
     bounds entries, but a tiled plan holds one guard-sized stream per
     distinct tile pattern, so watch these numbers (and shrink via
     ``plan_cache_resize`` or a lower guard) when caching large tiled
@@ -75,15 +78,18 @@ def plan_cache_info() -> dict:
     lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
     host_seen: dict = {}
     dev_seen: dict = {}
+    fused_seen: dict = {}
     for p in _PLAN_CACHE.values():
         for sp in [t.plan for t in getattr(p, "tiles", ())] or [p]:
             host_seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
             dev_seen[id(sp)] = getattr(sp, "device_stream_nbytes", 0)
+            fused_seen[id(sp)] = getattr(sp, "fused_stream_nbytes", 0)
     return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
                 max_size=PLAN_CACHE_SIZE,
                 hit_rate=_CACHE_STATS["hits"] / lookups if lookups else 0.0,
                 stream_bytes=sum(host_seen.values()),
-                device_stream_bytes=sum(dev_seen.values()))
+                device_stream_bytes=sum(dev_seen.values()),
+                fused_stream_bytes=sum(fused_seen.values()))
 
 
 def plan_cache_resize(n: int) -> dict:

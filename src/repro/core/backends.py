@@ -6,10 +6,13 @@ Three execution backends host the numeric phase of a cached symbolic plan:
   bit-exact oracles of the paper's algorithms) and the vectorized product
   stream (``engine="stream"``, DESIGN.md §9).
 * ``"pallas"`` — the TPU kernel schedule (one launch per plan
-  :class:`~repro.core.planner.KernelGroup`, DESIGN.md §2/§6).
+  :class:`~repro.core.planner.KernelGroup`, DESIGN.md §2/§6), plus the
+  fused single-launch stream kernel (``engine="fused"``,
+  ``core.pallas_stream``, DESIGN.md §11).
 * ``"jax"``    — the device-resident stream (``core.jax_stream``,
   DESIGN.md §10): the plan's product stream compiled into a jitted,
-  differentiable pure-JAX function.
+  differentiable pure-JAX function; ``engine="fused"`` swaps the XLA
+  lowering for the fused Pallas kernel on the same plan.
 
 Rather than each call site string-matching backend names, everything that
 needs a capability decision — ``core.api`` argument validation,
@@ -173,7 +176,12 @@ HOST = register_backend(ExecutionContract(
 
 PALLAS = register_backend(ExecutionContract(
     name="pallas",
-    engines=(None, "naive"),     # "naive" is a no-op: the kernel schedule
+    # "naive" is a no-op: the per-group kernel schedule.  "fused" is the
+    # single-launch fused stream kernel (core/pallas_stream.py, DESIGN.md
+    # §11) — it rides the plan's product stream, which is why the pallas
+    # backend now carries one (built lazily: per-group executions never
+    # touch it)
+    engines=(None, "naive", "fused"),
     default_engine="naive",
     # the host-only executors have no kernel family, and the "jax" auto
     # candidate (the device stream riding a tile grid) has no pallas lane
@@ -182,13 +190,14 @@ PALLAS = register_backend(ExecutionContract(
     supports_grad=False,
     bit_exact_oracle=False,
     device_resident=True,
-    carries_stream=False,
+    carries_stream=True,
     cost_domain="relative",
 ))
 
 JAX = register_backend(ExecutionContract(
     name="jax",
-    engines=(None, "stream"),    # the device stream is the only engine
+    # the device stream, plus its fused-Pallas lowering (DESIGN.md §11)
+    engines=(None, "stream", "fused"),
     default_engine="stream",
     supports_batched=True,
     supports_grad=True,

@@ -83,6 +83,36 @@ class DeviceStream:
                    + self.seg_ids.nbytes)
 
 
+def check_int32_stream(plan, s) -> None:
+    """Reject streams whose indices overflow int32 device arrays.
+
+    A hard error beats int32-wrapped in-bounds-promised gathers:
+    products/output slots (huge guard) or *operand* positions
+    (``a_pos``/``b_pos`` index the value arrays — a small stream over a
+    >2**31-nnz operand still needs wide indices) past int32.  Shared by
+    the device stream and the fused Pallas stream (``core.pallas_stream``),
+    whose index arrays bound-check identically.
+    """
+    if max(s.n_products, s.nnz, int(plan.a.col_ptr[-1]),
+           int(plan.b.col_ptr[-1])) > _I32_MAX:
+        raise ValueError(
+            f"stream of {s.n_products} products over operands of nnz "
+            f"{int(plan.a.col_ptr[-1])}/{int(plan.b.col_ptr[-1])} "
+            "exceeds int32 device indexing; lower stream_limit / "
+            "fast.STREAM_MAX_PRODUCTS or shrink the tile")
+
+
+def stream_seg_ids(s) -> np.ndarray:
+    """Per-product C-slot id of a host stream (int32, non-decreasing).
+
+    Segment p spans ``[seg_starts[p], seg_starts[p+1])`` of the sorted
+    stream, so the ids are the consecutive integers ``0..nnz_c-1`` repeated
+    by segment length — every stored C slot has at least one product.
+    """
+    lens = np.diff(np.append(s.seg_starts, s.n_products))
+    return np.repeat(np.arange(s.nnz, dtype=np.int32), lens)
+
+
 def device_stream(plan) -> Optional[DeviceStream]:
     """The plan's device-resident stream, built lazily and memoized.
 
@@ -97,21 +127,8 @@ def device_stream(plan) -> Optional[DeviceStream]:
         return None
     memo = plan._stream_memo
     if "device" not in memo:
-        # a hard error beats int32-wrapped in-bounds-promised gathers:
-        # products/output slots (huge guard) or *operand* positions
-        # (a_pos/b_pos index the value arrays — a small stream over a
-        # >2**31-nnz operand still needs wide indices) past int32
-        if max(s.n_products, s.nnz, int(plan.a.col_ptr[-1]),
-               int(plan.b.col_ptr[-1])) > _I32_MAX:
-            raise ValueError(
-                f"stream of {s.n_products} products over operands of nnz "
-                f"{int(plan.a.col_ptr[-1])}/{int(plan.b.col_ptr[-1])} "
-                "exceeds int32 device indexing; lower stream_limit / "
-                "fast.STREAM_MAX_PRODUCTS or shrink the tile")
-        # segment id per product: segment p spans
-        # [seg_starts[p], seg_starts[p+1]) of the sorted stream
-        lens = np.diff(np.append(s.seg_starts, s.n_products))
-        seg_ids = np.repeat(np.arange(s.nnz, dtype=np.int32), lens)
+        check_int32_stream(plan, s)
+        seg_ids = stream_seg_ids(s)
         with jax.ensure_compile_time_eval():
             # the lazy build may run *inside* a caller's jit trace (the
             # first traced execution of a fresh plan); the index arrays
@@ -159,37 +176,66 @@ def _take(values, idx):
     return jnp.asarray(values).at[idx].get(mode=_IN_BOUNDS)
 
 
-def _bilinear_contract(dev: DeviceStream):
-    """The custom-vjp gather→multiply→segment-sum contraction for ``dev``."""
+def bilinear_custom_vjp(forward, grad_a, grad_b):
+    """``jax.custom_vjp`` wrapper for a bilinear stream contraction.
+
+    ``forward(a_values, b_values)`` is the primal replay; the contraction is
+    bilinear, so its VJP is two more replays through the same frozen plan
+    indices (module docstring): ``grad_a(g, a_values, b_values)`` and
+    ``grad_b(g, a_values, b_values)`` each take the broadcast output
+    cotangent plus both residual operands and return the corresponding
+    operand cotangent (shaped like the primal operand — oversized raw value
+    arrays get oversized cotangents).  Shared by the XLA device stream
+    (:func:`_bilinear_contract`) and the fused Pallas stream
+    (``core.pallas_stream``), which differ only in how a replay is lowered.
+    ``jax.vmap`` composes with the returned function, which is how both
+    batched paths ride one trace for a whole ``[B, nnz]`` value stack.
+    """
 
     @jax.custom_vjp
     def contract(a_values, b_values):
-        prod = _take(a_values, dev.a_pos) * _take(b_values, dev.b_pos)
-        return jax.ops.segment_sum(prod, dev.seg_ids,
-                                   num_segments=dev.num_segments,
-                                   indices_are_sorted=True,
-                                   mode=_IN_BOUNDS)
+        return forward(a_values, b_values)
 
     def fwd(a_values, b_values):
         return contract(a_values, b_values), (a_values, b_values)
 
     def bwd(residuals, g):
         a_values, b_values = residuals
-        # cotangent per product, then scatter-add through the same frozen
-        # indices the forward gathered through (module docstring)
-        g_prod = _take(g, dev.seg_ids)
-        d_a = jax.ops.segment_sum(g_prod * _take(b_values, dev.b_pos),
-                                  dev.a_pos,
-                                  num_segments=a_values.shape[0],
-                                  mode=_IN_BOUNDS)
-        d_b = jax.ops.segment_sum(g_prod * _take(a_values, dev.a_pos),
-                                  dev.b_pos,
-                                  num_segments=b_values.shape[0],
-                                  mode=_IN_BOUNDS)
-        return d_a, d_b
+        return (grad_a(g, a_values, b_values),
+                grad_b(g, a_values, b_values))
 
     contract.defvjp(fwd, bwd)
     return contract
+
+
+def _bilinear_contract(dev: DeviceStream):
+    """The custom-vjp gather→multiply→segment-sum contraction for ``dev``."""
+
+    def forward(a_values, b_values):
+        prod = _take(a_values, dev.a_pos) * _take(b_values, dev.b_pos)
+        return jax.ops.segment_sum(prod, dev.seg_ids,
+                                   num_segments=dev.num_segments,
+                                   indices_are_sorted=True,
+                                   mode=_IN_BOUNDS)
+
+    # cotangent per product (a take through seg_ids), then scatter-add
+    # through the same frozen indices the forward gathered through; the
+    # shared g_prod gather is deduped by XLA CSE across the two replays
+    def grad_a(g, a_values, b_values):
+        g_prod = _take(g, dev.seg_ids)
+        return jax.ops.segment_sum(g_prod * _take(b_values, dev.b_pos),
+                                   dev.a_pos,
+                                   num_segments=a_values.shape[0],
+                                   mode=_IN_BOUNDS)
+
+    def grad_b(g, a_values, b_values):
+        g_prod = _take(g, dev.seg_ids)
+        return jax.ops.segment_sum(g_prod * _take(a_values, dev.a_pos),
+                                   dev.b_pos,
+                                   num_segments=b_values.shape[0],
+                                   mode=_IN_BOUNDS)
+
+    return bilinear_custom_vjp(forward, grad_a, grad_b)
 
 
 def stream_fn(plan):

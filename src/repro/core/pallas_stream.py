@@ -1,0 +1,424 @@
+"""Fused Pallas stream kernel: the whole numeric phase in one launch.
+
+``engine="fused"`` lowers a plan's product stream (``core.fast``, DESIGN.md
+§9) to a *single* ``pl.pallas_call``: the product axis ``[P]`` is tiled into
+grid blocks of ``FUSED_BLOCK`` products, and each grid step gathers its
+block's operand values, multiplies, reduces the block's segment partials,
+and accumulates them into the VMEM-resident output::
+
+    per grid step i over products [iT, (i+1)T):
+      prod    = x_vals[idx_x] * y_vals[idx_y] * mask          # gather+FMA
+      partial = onehot(local) @ prod                          # [T] segmented
+      out[seg_first_i : seg_first_i + T] += partial           # accumulate
+
+This is the accumulator-resident numeric phase of Nagasaka et al. /
+Gu et al. transplanted to Pallas: where ``backend="jax"`` lowers the same
+contraction to three separate XLA HLOs (gather → multiply → ``segment_sum``)
+with ``[P]``-sized intermediates in HBM, and the original Pallas path
+launches one kernel per plan group from Python, the fused kernel is one
+launch whose intermediates never leave VMEM (DESIGN.md §11).
+
+**Why the window accumulate is safe.**  The stream's segment ids are
+non-decreasing and consecutive (every stored C slot has >= 1 product), so
+within any block of ``T`` products the local ids ``seg - seg_first`` lie in
+``[0, T)`` — each id increment consumes at least one product.  A segment
+straddling a block boundary is handled by the ``+=`` into the resident
+output: its left part lands from block ``i``, its right part from block
+``i+1``, at the same output slot (Pallas grid steps are sequential, and the
+output block is carried across steps — the revisiting guarantee).  This
+"accumulate into the VMEM-resident output" strategy replaces both a
+carried-scratch partial and a host-side per-block combine; DESIGN.md §11
+records why it benched fastest.
+
+**Differentiability.**  The contraction is bilinear, so the backward pass is
+two more fused stream replays of the broadcast cotangent through permuted
+index views (:func:`jax_stream.bilinear_custom_vjp` — the vjp machinery is
+shared with the XLA device stream, only the replay lowering differs).  The
+grad views sort the stream by the differentiated operand's value position;
+positions with zero products would break the ``[0, T)`` window invariant as
+empty segments, so the views reduce into *compact* (rank) ids and a
+plan-static ``out_map`` scatter places them (DESIGN.md §11).
+
+**Hardware note.**  The in-kernel gather is isolated in :func:`_gather`
+(``jnp.take`` with an in-bounds promise) and the segmented reduction uses
+the one-hot-matmul idiom of ``kernels/spa.py`` — the two points a real-TPU
+port would revisit (Mosaic's arbitrary-gather support / MXU tiling).  Tier-1
+runs the kernel body under ``interpret=True`` (no accelerator in CI), which
+is also the default of every executor below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import fast, jax_stream
+from repro.core.jax_stream import (
+    _IN_BOUNDS,
+    _guard_error,
+    _is_traced,
+    _operand_values,
+    bilinear_custom_vjp,
+    check_int32_stream,
+    stream_seg_ids,
+)
+from repro.sparse.format import CSC
+
+# products per grid block (T): the kernel's VMEM working set per step is
+# O(T) index/value lanes plus the [T, T] one-hot; the output window it
+# accumulates into is T wide.  Overridable for tests (segment-boundary
+# edge cases build plans under tiny blocks); views/functions memoized on a
+# plan record the block they were built with and rebuild on mismatch.
+FUSED_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedView:
+    """Device-resident index arrays of one fused replay (P padded to Pp).
+
+    The forward view replays the stream in C-slot order (``out_map`` is
+    ``None`` — block partials accumulate straight into the output window).
+    Grad views replay it sorted by the differentiated operand's value
+    position, reduce into compact rank ids, and scatter through ``out_map``
+    (the sorted unique value positions) into the operand-shaped cotangent.
+    """
+
+    idx_x: Optional[jax.Array]      # [Pp] int32 into the x operand
+    idx_y: Optional[jax.Array]      # [Pp] int32 into the y operand
+    local: Optional[jax.Array]      # [Pp] int32 in [0, block): seg - first
+    mask: Optional[jax.Array]       # [Pp] f32 1/0 (0 on the padded tail)
+    seg_first: Optional[jax.Array]  # [nblocks] int32: block's first seg id
+    block_id: Optional[jax.Array]   # [nblocks] int32: 0..nblocks-1
+    out_map: Optional[jax.Array]    # [n_out] int32 scatter (grad views)
+    n_out: int                      # segments reduced by the kernel
+    n_products: int                 # real (unpadded) product count
+    block: int
+
+    @property
+    def n_blocks(self) -> int:
+        return -(-max(self.n_products, 1) // self.block)
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes held by this view's index arrays."""
+        return sum(a.nbytes for a in (self.idx_x, self.idx_y, self.local,
+                                      self.mask, self.seg_first,
+                                      self.block_id, self.out_map)
+                   if a is not None)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedStream:
+    """The plan's three fused replay views (forward + the two grad views).
+
+    Built lazily from the host :attr:`plan.stream` on first fused execution
+    and memoized on the plan alongside the host/XLA-device streams;
+    ``plan.fused_stream_nbytes`` / ``plan_cache_info()
+    ['fused_stream_bytes']`` report these buffers separately.
+    """
+
+    forward: FusedView
+    grad_a: FusedView
+    grad_b: FusedView
+    block: int
+
+    @property
+    def nbytes(self) -> int:
+        return (self.forward.nbytes + self.grad_a.nbytes
+                + self.grad_b.nbytes)
+
+
+def _build_view(idx_x, idx_y, seg, block: int, n_out: int,
+                out_map=None) -> FusedView:
+    """One replay view: pad [P] streams to whole blocks, move to device.
+
+    ``seg`` must be non-decreasing with unit steps covering ``0..n_out-1``
+    (forward: the stream's C-slot ids; grad: compact ranks) — that is what
+    bounds every block's local ids to ``[0, block)``.
+    """
+    p = len(idx_x)
+    if p == 0:
+        return FusedView(None, None, None, None, None, None,
+                         None if out_map is None else jnp.asarray(
+                             out_map, jnp.int32),
+                         n_out, 0, block)
+    nblocks = -(-p // block)
+    pp = nblocks * block
+
+    def _pad(arr, fill=0):
+        out = np.full(pp, fill, arr.dtype)
+        out[:p] = arr
+        return out
+
+    starts = np.arange(nblocks, dtype=np.int64) * block   # all < p
+    seg = np.asarray(seg, np.int64)
+    seg_first = seg[starts]
+    local = seg - np.repeat(seg_first, block)[:p]
+    mask = np.zeros(pp, np.float32)
+    mask[:p] = 1.0
+    with jax.ensure_compile_time_eval():
+        # the lazy build may run inside a caller's jit trace (the first
+        # traced fused execution of a fresh plan); the index arrays must
+        # come out concrete — they are plan state shared by every later
+        # trace, not constants of this one (same rule as device_stream)
+        dev = (jnp.asarray(_pad(np.asarray(idx_x, np.int32))),
+               jnp.asarray(_pad(np.asarray(idx_y, np.int32))),
+               jnp.asarray(_pad(local.astype(np.int32))),
+               jnp.asarray(mask),
+               jnp.asarray(seg_first.astype(np.int32)),
+               jnp.asarray(np.arange(nblocks, dtype=np.int32)),
+               None if out_map is None
+               else jnp.asarray(np.asarray(out_map, np.int32)))
+    return FusedView(*dev, n_out=n_out, n_products=p, block=block)
+
+
+def _grad_view(pos, other_pos, seg_ids, block: int) -> FusedView:
+    """Replay view for d(operand at ``pos``): sort by ``pos``, compact ids.
+
+    The replay gathers the output cotangent through ``seg_ids`` (x side)
+    and the other operand's values through ``other_pos`` (y side); value
+    positions with zero products are *absent* (compact ranks keep the
+    no-empty-segment invariant), so the kernel output scatters through
+    ``out_map`` — the sorted unique positions — into the full cotangent.
+    """
+    order = np.argsort(pos, kind="stable")
+    seq = np.asarray(pos)[order]
+    uniq, inv = np.unique(seq, return_inverse=True)
+    return _build_view(seg_ids[order], np.asarray(other_pos)[order], inv,
+                       block, n_out=len(uniq), out_map=uniq)
+
+
+def fused_stream(plan, block: int | None = None) -> Optional[FusedStream]:
+    """The plan's fused replay views, built lazily and memoized.
+
+    ``None`` when the plan-memory guard tripped (no host stream to lift).
+    ``block`` overrides the product-axis tile size (default
+    ``FUSED_BLOCK``); a memoized entry built under a different block is
+    rebuilt, so tests can shrink the tile on a fresh plan.
+    """
+    s = plan.stream
+    if s is None:
+        return None
+    block = FUSED_BLOCK if block is None else int(block)
+    if block < 1:
+        raise ValueError(f"fused block must be >= 1, got {block}")
+    memo = plan._stream_memo
+    fs = memo.get("fused")
+    if fs is None or fs.block != block:
+        check_int32_stream(plan, s)
+        seg_ids = stream_seg_ids(s)
+        fs = FusedStream(
+            forward=_build_view(s.a_pos, s.b_pos, seg_ids, block,
+                                n_out=s.nnz),
+            grad_a=_grad_view(s.a_pos, s.b_pos, seg_ids, block),
+            grad_b=_grad_view(s.b_pos, s.a_pos, seg_ids, block),
+            block=block,
+        )
+        memo["fused"] = fs
+        # the jitted contraction closes over the views: drop stale entries
+        for k in ("fused_contract", "fused_fn", "fused_fn_batched"):
+            memo.pop(k, None)
+    return fs
+
+
+def _gather(values, idx):
+    """In-kernel indexed vector load (the hardware-swappable point).
+
+    A flat gather with the stream's in-bounds promise: exact under
+    ``interpret=True`` (what CI runs); a Mosaic TPU port would swap this
+    for the one-hot MXU gather of ``kernels/spa.py`` or a DMA-based load.
+    """
+    return values.at[idx].get(mode=_IN_BOUNDS)
+
+
+def _fused_kernel(bid_ref, sf_ref, ix_ref, iy_ref, loc_ref, mask_ref,
+                  x_ref, y_ref, out_ref, *, block: int):
+    """One grid step: gather, multiply, reduce, window-accumulate.
+
+    The output block is the whole (padded) result vector, resident across
+    all grid steps; step 0 zero-initializes it.  Grid position comes from
+    the ``block_id`` input (not ``pl.program_id``) so ``jax.vmap`` over the
+    ``pallas_call`` stays well-defined when the batch axis becomes the
+    leading grid dimension (same rule as ``kernels/spa.py``).
+    """
+    @pl.when(bid_ref[0] == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    prod = (_gather(x_ref[...], ix_ref[...])
+            * _gather(y_ref[...], iy_ref[...]) * mask_ref[...])      # [T]
+    # within-block segmented sum as a one-hot contraction (MXU idiom):
+    # partial[r] = sum_c prod[c] * [local[c] == r]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
+    onehot = (iota == loc_ref[...][None, :]).astype(prod.dtype)
+    partial = onehot @ prod                                           # [T]
+    start = sf_ref[0]
+    window = pl.ds(start, block)
+    out_ref[window] = out_ref[window] + partial
+
+
+def _fused_call(view: FusedView, x, y, *, interpret: bool = True):
+    """Run one fused replay: ``[n_out]`` segment sums in one launch."""
+    dt = jnp.result_type(x, y)
+    if view.n_products == 0:
+        return jnp.zeros((view.n_out,), dt)
+    block = view.block
+    # the accumulate window [seg_first, seg_first + T) may run past the
+    # last segment: pad the output by one block and slice it off
+    out_pad = view.n_out + block
+    nblocks = view.n_blocks
+    x = jnp.asarray(x, dt)
+    y = jnp.asarray(y, dt)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, block=block),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),          # block_id
+            pl.BlockSpec((1,), lambda i: (i,)),          # seg_first
+            pl.BlockSpec((block,), lambda i: (i,)),      # idx_x
+            pl.BlockSpec((block,), lambda i: (i,)),      # idx_y
+            pl.BlockSpec((block,), lambda i: (i,)),      # local
+            pl.BlockSpec((block,), lambda i: (i,)),      # mask
+            pl.BlockSpec(x.shape, lambda i: (0,)),       # x values (whole)
+            pl.BlockSpec(y.shape, lambda i: (0,)),       # y values (whole)
+        ],
+        out_specs=pl.BlockSpec((out_pad,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((out_pad,), dt),
+        interpret=interpret,
+    )(view.block_id, view.seg_first, view.idx_x, view.idx_y, view.local,
+      view.mask.astype(dt), x, y)
+    return out[: view.n_out]
+
+
+def _fused_contract(fs: FusedStream, interpret: bool = True):
+    """The custom-vjp fused contraction: forward + two fused grad replays."""
+
+    def forward(a_values, b_values):
+        return _fused_call(fs.forward, a_values, b_values,
+                           interpret=interpret)
+
+    def _scatter(view, compact, n_primal, dt):
+        if view.out_map is None:      # P == 0: no contributing products
+            return jnp.zeros((n_primal,), dt)
+        return jnp.zeros((n_primal,), dt).at[view.out_map].set(
+            compact, unique_indices=True, mode=_IN_BOUNDS)
+
+    def grad_a(g, a_values, b_values):
+        compact = _fused_call(fs.grad_a, g, b_values, interpret=interpret)
+        return _scatter(fs.grad_a, compact, a_values.shape[0],
+                        compact.dtype)
+
+    def grad_b(g, a_values, b_values):
+        compact = _fused_call(fs.grad_b, g, a_values, interpret=interpret)
+        return _scatter(fs.grad_b, compact, b_values.shape[0],
+                        compact.dtype)
+
+    return bilinear_custom_vjp(forward, grad_a, grad_b)
+
+
+def fused_fn(plan, *, interpret: bool = True, block: int | None = None):
+    """The plan's jitted fused function ``f(a_values, b_values) -> c_values``.
+
+    Pure, jit-compatible, differentiable (shared bilinear custom vjp) —
+    the fused twin of :func:`jax_stream.stream_fn`.  Memoized on the plan
+    (keyed on the block/interpret it was built under); guarded plans raise
+    the capability error.
+    """
+    fs = fused_stream(plan, block)
+    if fs is None:
+        raise _guard_error(plan)
+    memo = plan._stream_memo
+    if memo.get("fused_fn_key") != (fs.block, interpret):
+        memo["fused_contract"] = _fused_contract(fs, interpret=interpret)
+        memo["fused_fn"] = jax.jit(memo["fused_contract"])
+        memo.pop("fused_fn_batched", None)
+        memo["fused_fn_key"] = (fs.block, interpret)
+    return memo["fused_fn"]
+
+
+def fused_fn_batched(plan, *, interpret: bool = True,
+                     block: int | None = None):
+    """Vmapped twin of :func:`fused_fn`: ``[B, nnz]`` stacks, one trace.
+
+    ``jit(vmap(contract))`` — the batch axis becomes the leading grid
+    dimension of the one fused launch (exactly how ``spa_spgemm_batched``
+    batches, DESIGN.md §7), so the launch count stays 1 regardless of B.
+    """
+    fused_fn(plan, interpret=interpret, block=block)   # ensures contract
+    memo = plan._stream_memo
+    if "fused_fn_batched" not in memo:
+        memo["fused_fn_batched"] = jax.jit(jax.vmap(memo["fused_contract"]))
+    return memo["fused_fn_batched"]
+
+
+def execute_fused(plan, a_values, b_values, *, interpret: bool = True,
+                  stats: dict | None = None,
+                  validate: str | None = None) -> CSC:
+    """Numeric phase via the fused kernel (executor dispatch target).
+
+    One ``pallas_call`` launch; result values are a device array on the
+    plan's canonical stream structure.  Guarded plans fall back to the host
+    stream engine on concrete operands and raise the capability error
+    under a trace (same semantics as the jax backend).
+    """
+    plan.a.check_compatible(a_values, validate)
+    plan.b.check_compatible(b_values, validate)
+    av = _operand_values(a_values)
+    bv = _operand_values(b_values)
+    if plan.stream is None:
+        if _is_traced(av, bv):
+            raise _guard_error(plan)
+        out = fast.execute_stream(plan, np.asarray(av), np.asarray(bv),
+                                  stats=stats)
+        if stats is not None:
+            stats["backend"] = plan.backend
+            stats["fallback"] = "host"
+        return out
+    vals = fused_fn(plan, interpret=interpret)(av, bv)
+    s = plan.stream
+    if stats is not None:
+        stats.update(engine="fused", backend=plan.backend, device=True,
+                     fallback=None, n_launches=1,
+                     stream_products=s.n_products,
+                     fused_block=plan._stream_memo["fused"].block,
+                     result_shape=s.shape)
+    return CSC(vals, s.c_rows, s.c_col_ptr, s.shape)
+
+
+def execute_fused_batched(plan, a_values, b_values, *,
+                          interpret: bool = True,
+                          stats: dict | None = None,
+                          validate: str | None = None) -> list:
+    """Batched fused numeric phase: B value sets, still one launch."""
+    from repro.core.executor import _check_batch   # lazy: executor imports us
+
+    av = jax_stream._batched_operand(plan.a, a_values, validate)
+    bv = jax_stream._batched_operand(plan.b, b_values, validate)
+    batch = _check_batch(av, bv)
+    if plan.stream is None:
+        if _is_traced(av, bv):
+            raise _guard_error(plan)
+        out = fast.execute_stream_batched(
+            plan, np.asarray(av)[:, : int(plan.a.col_ptr[-1])],
+            np.asarray(bv)[:, : int(plan.b.col_ptr[-1])], stats=stats)
+        if stats is not None:
+            stats["backend"] = plan.backend
+            stats["fallback"] = "host"
+            stats["batch"] = batch
+        return out
+    vals = fused_fn_batched(plan, interpret=interpret)(av, bv)
+    s = plan.stream
+    if stats is not None:
+        stats.update(engine="fused", backend=plan.backend, device=True,
+                     fallback=None, path="vmap", batch=batch, n_launches=1,
+                     stream_products=s.n_products,
+                     fused_block=plan._stream_memo["fused"].block,
+                     result_shape=s.shape)
+    return [CSC(vals[b], s.c_rows, s.c_col_ptr, s.shape)
+            for b in range(batch)]

@@ -307,11 +307,12 @@ class SpgemmPlan:
         neither the plan-time lexsort nor the O(flops) resident memory;
         memoized on the plan, so tiled child plans shared through the LRU
         share one stream.  Carried by every stream-capable backend
-        (``contract.carries_stream``: host and jax — the jax backend builds
-        its device-resident index arrays from this host stream and keeps
-        both, DESIGN.md §10).  ``None`` on Pallas plans and when the stream
-        would exceed ``stream_limit`` (the guard resolved at plan time) —
-        stream executions then rebuild transiently.
+        (``contract.carries_stream``: host, jax, and pallas — the jax
+        backend builds its device-resident index arrays from this host
+        stream, and the fused Pallas kernel its replay views, DESIGN.md
+        §10/§11).  ``None`` when the stream would exceed ``stream_limit``
+        (the guard resolved at plan time) — stream executions then rebuild
+        transiently.
         """
         if not self.contract.carries_stream:
             return None
@@ -343,17 +344,33 @@ class SpgemmPlan:
         d = self._stream_memo.get("device")
         return d.nbytes if d is not None else 0
 
-    def stream_apply(self, a_values, b_values):
+    @property
+    def fused_stream_nbytes(self) -> int:
+        """Bytes of fused-kernel replay views held by this plan.
+
+        The fused engine (``core.pallas_stream``, DESIGN.md §11) caches
+        three device-resident index views (forward + two grad replays) on
+        the plan; this reads the memo without triggering the lazy build —
+        ``plan_cache_info()['fused_stream_bytes']`` aggregates it alongside
+        the host and XLA-device stream bytes.
+        """
+        f = self._stream_memo.get("fused")
+        return f.nbytes if f is not None else 0
+
+    def stream_apply(self, a_values, b_values, engine: str = None):
         """Jit-compatible, differentiable numeric phase: C values only.
 
-        The jax-backend entry point for traced code (DESIGN.md §10):
+        The device-backend entry point for traced code (DESIGN.md §10):
         ``a_values``/``b_values`` are value arrays (or tracers) aligned with
         the planned patterns, and the return is the ``[nnz_c]`` C value
         array of the plan's canonical output structure
         (``plan.stream.c_rows`` / ``c_col_ptr``) — a pure function of the
-        inputs, safe under ``jax.jit``/``jax.grad``/``jax.vmap``.  Requires
-        a stream-capable backend and a plan-resident stream (guarded plans
-        raise: a traced execution cannot fall back to the host rebuild).
+        inputs, safe under ``jax.jit``/``jax.grad``/``jax.vmap``.
+        ``engine=None`` lowers through the XLA stream; ``engine="fused"``
+        through the single-launch fused Pallas kernel (DESIGN.md §11) —
+        both ride the same bilinear custom vjp.  Requires a stream-capable
+        backend and a plan-resident stream (guarded plans raise: a traced
+        execution cannot fall back to the host rebuild).
         """
         from repro.core import jax_stream
 
@@ -362,6 +379,14 @@ class SpgemmPlan:
         # here rather than read undefined memory
         self.a.check_compatible(a_values)
         self.b.check_compatible(b_values)
+        if engine == "fused":
+            from repro.core import pallas_stream
+
+            return pallas_stream.fused_fn(self)(a_values, b_values)
+        if engine is not None and engine != "stream":
+            raise ValueError(
+                f"stream_apply supports engine=None/'stream'/'fused', "
+                f"got {engine!r}")
         return jax_stream.stream_fn(self)(a_values, b_values)
 
     @property
@@ -461,14 +486,20 @@ def plan_spgemm(
     params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
     a_pat, b_pat = Pattern.of(a), Pattern.of(b)
 
+    # resolve the guard now (it is a mutable module knob) so every plan's
+    # lazy stream build is deterministic no matter when it happens; pallas
+    # plans carry it too since the fused engine rides the product stream
+    limit = (_fast.STREAM_MAX_PRODUCTS if stream_limit is None
+             else int(stream_limit))
     if backend == "pallas":
         pre, layout = _plan_pallas(a, b, method, params, block_cols,
                                    tile_cols)
         return SpgemmPlan(method, "pallas", _freeze(params), a_pat, b_pat,
-                          pre, layout)
-    # stream-capable backends (host, jax) are pattern-only plans.  The jax
-    # backend never runs the naive oracles (contract.bit_exact_oracle is
-    # False), so it skips the blocking analysis they consume.
+                          pre, layout, limit)
+    # the remaining stream-capable backends (host, jax) are pattern-only
+    # plans.  The jax backend never runs the naive oracles
+    # (contract.bit_exact_oracle is False), so it skips the blocking
+    # analysis they consume.
     pre = None
     if contract.bit_exact_oracle:
         if method.startswith(("spars", "hash")):
@@ -507,12 +538,17 @@ class TilePlan:
     a_vals: Tuple[int, int]
     b_vals: np.ndarray
     plan: SpgemmPlan
+    #: engine override the cost model chose for this tile (None = the child
+    #: plan's method default; "fused" = the single-launch fused kernel)
+    engine: Optional[str] = None
 
     @property
     def method(self) -> str:
-        # report the candidate spelling the cost model chose: "jax" tiles
-        # (the device stream riding a host grid) carry an expand-method
-        # child plan on the jax backend
+        # report the candidate spelling the cost model chose: "jax"/"fused"
+        # tiles (the device stream riding a host grid) carry an
+        # expand-method child plan on the jax backend
+        if self.engine == "fused":
+            return "fused"
         return "jax" if self.plan.backend == "jax" else self.plan.method
 
 
@@ -572,6 +608,13 @@ class TiledSpgemmPlan:
         """Device-resident stream bytes held via child tile plans (distinct
         children counted once, as in :attr:`stream_nbytes`)."""
         seen = {id(t.plan): t.plan.device_stream_nbytes for t in self.tiles}
+        return sum(seen.values())
+
+    @property
+    def fused_stream_nbytes(self) -> int:
+        """Fused-kernel replay-view bytes held via child tile plans
+        (distinct children counted once, as in :attr:`stream_nbytes`)."""
+        seen = {id(t.plan): t.plan.fused_stream_nbytes for t in self.tiles}
         return sum(seen.values())
 
     @property
@@ -680,15 +723,23 @@ def plan_spgemm_tiled(
                 else nnz_balanced_col_bounds(b, auto_n))
 
     def _tile_plan(ta, tb, method):
-        # the "jax" candidate spelling = the device stream (DESIGN.md §10):
-        # its child plan is an expand-method plan on the jax backend, so a
-        # host grid can mix numpy tiles with device-stream tiles
-        meth, be = ("expand", "jax") if method == "jax" else (method, backend)
+        # the "jax" candidate spelling = the device stream (DESIGN.md §10),
+        # "fused" = its single-launch Pallas lowering (DESIGN.md §11): both
+        # ride an expand-method child plan on the jax backend, so a host
+        # grid can mix numpy tiles with device-stream/fused tiles.  The
+        # engine distinction lives on the TilePlan, not the child plan —
+        # same pattern, same shared plan in the LRU.
+        if method in ("jax", "fused"):
+            meth, be = "expand", "jax"
+            engine = "fused" if method == "fused" else None
+        else:
+            meth, be, engine = method, backend, None
         if cache:
             from repro.core.api import _cached_plan
 
-            return _cached_plan(ta, tb, meth, be, resolve_params(meth))
-        return plan_spgemm(ta, tb, meth, backend=be)
+            return _cached_plan(ta, tb, meth, be,
+                                resolve_params(meth)), engine
+        return plan_spgemm(ta, tb, meth, backend=be), engine
 
     # A column blocks depend only on k: slice them once, not once per n block
     a_tiles = [csc_col_slice(a, int(k0), int(k1))
@@ -707,14 +758,15 @@ def plan_spgemm_tiled(
             if stats.flops == 0:
                 continue  # stored B entries only reference empty A columns
             method = choose_method(stats, backend, cands, constants)
+            child, engine = _tile_plan(a_tile, b_tile, method)
             tiles.append(TilePlan(
                 k=ki, n=ni, a_vals=(a_lo, a_hi), b_vals=b_lo + rel,
-                plan=_tile_plan(a_tile, b_tile, method)))
+                plan=child, engine=engine))
 
     params = (("candidates", cands),
-              # stream-capable backends only: the guard steers per-tile
-              # method choices there; None on pallas so knob changes don't
-              # distinguish its plans
+              # stream-carrying backends only (all three today): the guard
+              # steers host/jax per-tile method choices and bounds every
+              # child plan's lazy stream build, fused replays included
               ("stream_guard",
                _fast.STREAM_MAX_PRODUCTS if contract.carries_stream
                else None),

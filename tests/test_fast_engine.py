@@ -148,22 +148,24 @@ def test_plan_cache_shares_stream_metadata():
     plan_cache_clear()
 
 
-def test_stream_bytes_reported_and_guard_key_host_only():
+def test_stream_bytes_reported_and_guard_keys_stream_carriers():
     plan_cache_clear()
     a = random_powerlaw_csc(40, 3.0, seed=30)
     spgemm(a, a, method="expand")            # default engine builds a stream
     assert plan_cache_info()["stream_bytes"] > 0
-    # the guard knob keys host plans only: a pallas plan must survive a
-    # knob change (it carries no stream)
+    # the guard knob keys every stream-carrying plan — since PR 6 that is
+    # all three backends (pallas plans carry a stream for the fused
+    # engine, DESIGN.md §11), so a knob change rebuilds pallas and host
+    # plans alike
     spgemm(a, a, method="spa", backend="pallas")
     misses = plan_cache_info()["misses"]
     old = fast.STREAM_MAX_PRODUCTS
     try:
         fast.STREAM_MAX_PRODUCTS = old + 1
         spgemm(a, a, method="spa", backend="pallas")
-        assert plan_cache_info()["misses"] == misses      # pallas: hit
+        assert plan_cache_info()["misses"] == misses + 1  # pallas: rebuilt
         spgemm(a, a, method="expand")
-        assert plan_cache_info()["misses"] == misses + 1  # host: rebuilt
+        assert plan_cache_info()["misses"] == misses + 2  # host: rebuilt
     finally:
         fast.STREAM_MAX_PRODUCTS = old
     plan_cache_clear()

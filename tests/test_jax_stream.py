@@ -310,8 +310,11 @@ def test_backend_registry_contracts():
     host, pallas, jx = (get_backend(n) for n in ("host", "pallas", "jax"))
     assert host.bit_exact_oracle and not host.supports_grad
     assert jx.supports_grad and jx.device_resident and jx.carries_stream
-    assert not pallas.carries_stream and pallas.cost_domain == "relative"
+    # the fused engine rides the plan's product stream, so since PR 6 the
+    # pallas contract carries one too (built lazily)
+    assert pallas.carries_stream and pallas.cost_domain == "relative"
     assert "expand" in pallas.excluded_methods
+    assert "fused" in pallas.engines and "fused" in jx.engines
     with pytest.raises(ValueError, match="unknown backend"):
         get_backend("cuda")
     with pytest.raises(ValueError, match="unknown backend"):
@@ -354,12 +357,17 @@ def test_jax_method_spellings_share_one_canonical_plan():
     plan_cache_clear()
 
 
-def test_stream_apply_on_streamless_backend_names_the_capability():
+def test_stream_apply_works_on_pallas_plans():
+    """Pallas plans carry a product stream since PR 6 (the fused engine
+    rides it), so ``stream_apply`` — previously a capability error there —
+    now traces the same contraction as a host/jax plan of the pattern."""
     a = random_powerlaw_csc(20, 2.0, seed=19)
     pallas_plan = plan_spgemm(a, a, "spa", backend="pallas")
-    with pytest.raises(ValueError, match="carries no product stream"):
-        pallas_plan.stream_apply(np.asarray(a.values),
-                                 np.asarray(a.values))
+    host_plan = plan_spgemm(a, a, "expand", backend="host")
+    vals = pallas_plan.stream_apply(np.asarray(a.values, F32),
+                                    np.asarray(a.values, F32))
+    ref = host_plan.execute(a, a, engine="stream")
+    np.testing.assert_allclose(np.asarray(vals), ref.values, rtol=2e-6)
 
 
 def test_stream_apply_checks_operand_shapes():
