@@ -58,10 +58,13 @@ from repro.core.api import (
     cached_plan,
     plan_cache_clear,
     plan_cache_info,
+    plan_cache_key,
+    plan_cache_peek,
     plan_cache_resize,
     spgemm,
     spgemm_batched,
 )
+from repro.core.plan_builder import BuildResult, PlanBuilder, warm_plan
 
 __all__ = [
     "VL_MAX",
@@ -109,7 +112,12 @@ __all__ = [
     "cached_plan",
     "plan_cache_clear",
     "plan_cache_info",
+    "plan_cache_key",
+    "plan_cache_peek",
     "plan_cache_resize",
+    "BuildResult",
+    "PlanBuilder",
+    "warm_plan",
     "spgemm",
     "spgemm_batched",
     "ALGORITHMS",

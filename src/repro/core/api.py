@@ -25,6 +25,7 @@ raises instead of being silently ignored.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 
 from repro.core import backends
@@ -48,14 +49,28 @@ DEFAULT_METHOD = "h-hash-256/256"
 # resize at runtime with plan_cache_resize()
 PLAN_CACHE_SIZE = 64
 _PLAN_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
-_CACHE_STATS = {"hits": 0, "misses": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+# The LRU locking contract (DESIGN.md §12): every read or write of
+# _PLAN_CACHE/_CACHE_STATS holds _CACHE_LOCK — required since the
+# background plan builder (core/plan_builder.py) shares the LRU with
+# latency-critical serving threads.  Symbolic builds themselves run
+# *outside* the lock (they are the expensive part); _BUILDING holds one
+# Event per key with a build in flight so concurrent requests for the
+# same pattern wait for that build instead of duplicating it
+# (single-flight — the "no double-builds" guarantee the hammer test
+# asserts).
+_CACHE_LOCK = threading.RLock()
+_BUILDING: "dict[tuple, threading.Event]" = {}
 
 
 def plan_cache_clear() -> None:
     """Drop all cached plans and reset hit/miss counters."""
-    _PLAN_CACHE.clear()
-    _CACHE_STATS["hits"] = 0
-    _CACHE_STATS["misses"] = 0
+    with _CACHE_LOCK:
+        _PLAN_CACHE.clear()
+        _CACHE_STATS["hits"] = 0
+        _CACHE_STATS["misses"] = 0
+        _CACHE_STATS["evictions"] = 0
 
 
 def plan_cache_info() -> dict:
@@ -75,21 +90,24 @@ def plan_cache_info() -> dict:
     ``plan_cache_resize`` or a lower guard) when caching large tiled
     workloads.
     """
-    lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
-    host_seen: dict = {}
-    dev_seen: dict = {}
-    fused_seen: dict = {}
-    for p in _PLAN_CACHE.values():
-        for sp in [t.plan for t in getattr(p, "tiles", ())] or [p]:
-            host_seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
-            dev_seen[id(sp)] = getattr(sp, "device_stream_nbytes", 0)
-            fused_seen[id(sp)] = getattr(sp, "fused_stream_nbytes", 0)
-    return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
-                max_size=PLAN_CACHE_SIZE,
-                hit_rate=_CACHE_STATS["hits"] / lookups if lookups else 0.0,
-                stream_bytes=sum(host_seen.values()),
-                device_stream_bytes=sum(dev_seen.values()),
-                fused_stream_bytes=sum(fused_seen.values()))
+    with _CACHE_LOCK:
+        lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
+        host_seen: dict = {}
+        dev_seen: dict = {}
+        fused_seen: dict = {}
+        for p in _PLAN_CACHE.values():
+            for sp in [t.plan for t in getattr(p, "tiles", ())] or [p]:
+                host_seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
+                dev_seen[id(sp)] = getattr(sp, "device_stream_nbytes", 0)
+                fused_seen[id(sp)] = getattr(sp, "fused_stream_nbytes", 0)
+        return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
+                    max_size=PLAN_CACHE_SIZE,
+                    hit_rate=(_CACHE_STATS["hits"] / lookups
+                              if lookups else 0.0),
+                    in_flight=len(_BUILDING),
+                    stream_bytes=sum(host_seen.values()),
+                    device_stream_bytes=sum(dev_seen.values()),
+                    fused_stream_bytes=sum(fused_seen.values()))
 
 
 def plan_cache_resize(n: int) -> dict:
@@ -104,31 +122,84 @@ def plan_cache_resize(n: int) -> dict:
     n = int(n)
     if n < 0:
         raise ValueError(f"cache size must be >= 0, got {n}")
-    PLAN_CACHE_SIZE = n
-    while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
-        _PLAN_CACHE.popitem(last=False)
+    with _CACHE_LOCK:
+        PLAN_CACHE_SIZE = n
+        while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
+            _PLAN_CACHE.popitem(last=False)
+            _CACHE_STATS["evictions"] += 1
     return plan_cache_info()
 
 
 def _cache_get(key):
-    plan = _PLAN_CACHE.get(key)
-    if plan is not None:
-        _PLAN_CACHE.move_to_end(key)
-        _CACHE_STATS["hits"] += 1
-        return plan
-    _CACHE_STATS["misses"] += 1
-    return None
+    with _CACHE_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _PLAN_CACHE.move_to_end(key)
+            _CACHE_STATS["hits"] += 1
+            return plan
+        _CACHE_STATS["misses"] += 1
+        return None
 
 
 def _cache_put(key, plan):
-    _PLAN_CACHE[key] = plan
-    while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
-        _PLAN_CACHE.popitem(last=False)
+    with _CACHE_LOCK:
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
+            _PLAN_CACHE.popitem(last=False)
+            _CACHE_STATS["evictions"] += 1
 
 
-def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
-                 params: dict,
-                 stream_limit: int | None = None) -> SpgemmPlan:
+def plan_cache_peek(key):
+    """Non-mutating cache lookup: no LRU promotion, no counter updates.
+
+    The latency-critical probe (DESIGN.md §12): a serving tick asks "is the
+    device plan for this pattern already built?" without perturbing the
+    eviction order or the hit/miss telemetry.  ``key`` comes from
+    :func:`plan_cache_key`.  Returns the plan or ``None``.
+    """
+    with _CACHE_LOCK:
+        return _PLAN_CACHE.get(key)
+
+
+def _build_once(key, build):
+    """Fetch ``key`` from the LRU, or run ``build()`` exactly once.
+
+    Single-flight across threads: the first requester of a missing key
+    becomes the owner and runs the (expensive, unlocked) symbolic build;
+    concurrent requesters for the same key wait on the owner's completion
+    event and then take the cache hit, instead of duplicating the build.
+    A failed build wakes the waiters, one of which becomes the new owner
+    and retries.  With ``PLAN_CACHE_SIZE == 0`` the published entry is
+    evicted immediately, so every caller builds — the documented
+    cache-disabled semantics.
+    """
+    while True:
+        with _CACHE_LOCK:
+            plan = _PLAN_CACHE.get(key)
+            if plan is not None:
+                _PLAN_CACHE.move_to_end(key)
+                _CACHE_STATS["hits"] += 1
+                return plan
+            done = _BUILDING.get(key)
+            owner = done is None
+            if owner:
+                done = _BUILDING[key] = threading.Event()
+                _CACHE_STATS["misses"] += 1
+        if owner:
+            try:
+                plan = build()
+                _cache_put(key, plan)
+            finally:
+                with _CACHE_LOCK:
+                    _BUILDING.pop(key, None)
+                done.set()
+            return plan
+        done.wait()
+
+
+def _single_plan_key(a: CSC, b: CSC, method: str, backend: str,
+                     params: dict,
+                     stream_limit: int | None = None) -> tuple:
     # for stream-capable plans (host, jax) the stream guard is part of the
     # key: plans resolve it at build time, so changing
     # fast.STREAM_MAX_PRODUCTS must not hand back plans built under the old
@@ -147,16 +218,43 @@ def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
         limit = int(stream_limit)
     else:
         limit = _fast.STREAM_MAX_PRODUCTS
-    key = (pattern_fingerprint(a), pattern_fingerprint(b), method, backend,
-           tuple(sorted(params.items())), limit)
-    plan = _cache_get(key)
-    if plan is None:
-        plan = plan_spgemm(a, b, method, backend=backend,
-                           t=params.get("t"), b_min=params.get("b_min"),
-                           b_max=params.get("b_max"),
-                           stream_limit=stream_limit)
-        _cache_put(key, plan)
-    return plan
+    return (pattern_fingerprint(a), pattern_fingerprint(b), method, backend,
+            tuple(sorted(params.items())), limit)
+
+
+def plan_cache_key(a: CSC, b: CSC, method: str | None = None, *,
+                   backend: str | None = None, t: float | None = None,
+                   b_min: int | None = None, b_max: int | None = None,
+                   stream_limit: int | None = None) -> tuple:
+    """The LRU key :func:`cached_plan` would use for these arguments.
+
+    For non-blocking probes (DESIGN.md §12): compute the key once, then
+    :func:`plan_cache_peek` it on the latency path while a background
+    :class:`~repro.core.plan_builder.PlanBuilder` owns the build.  Costs
+    two pattern fingerprints (O(nnz)), no plan construction.
+    """
+    method, backend = _resolve_method_backend(method, backend)
+    if method == "auto":
+        raise ValueError(
+            "plan_cache_key addresses single-method plans; method='auto' "
+            "uses the tiled entry points")
+    _check_canonical_only(backend, t, b_min, b_max)
+    return _single_plan_key(a, b, method, backend,
+                            resolve_params(method, t=t, b_min=b_min,
+                                           b_max=b_max),
+                            stream_limit=stream_limit)
+
+
+def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
+                 params: dict,
+                 stream_limit: int | None = None) -> SpgemmPlan:
+    key = _single_plan_key(a, b, method, backend, params, stream_limit)
+    return _build_once(
+        key,
+        lambda: plan_spgemm(a, b, method, backend=backend,
+                            t=params.get("t"), b_min=params.get("b_min"),
+                            b_max=params.get("b_max"),
+                            stream_limit=stream_limit))
 
 
 def cached_plan(a: CSC, b: CSC, method: str | None = None, *,
@@ -197,12 +295,10 @@ def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,
            spec, cands,
            _fast.STREAM_MAX_PRODUCTS
            if backends.get_backend(backend).carries_stream else None)
-    plan = _cache_get(key)
-    if plan is None:
-        plan = plan_spgemm_tiled(a, b, backend=backend, tile=tile,
-                                 candidates=cands)
-        _cache_put(key, plan)
-    return plan
+    return _build_once(
+        key,
+        lambda: plan_spgemm_tiled(a, b, backend=backend, tile=tile,
+                                  candidates=cands))
 
 
 def _check_plan_overrides(plan, method, backend, t, b_min, b_max,

@@ -1,0 +1,269 @@
+"""Background plan construction: the symbolic phase off the latency path.
+
+Serving ticks must never wait on a plan build (ROADMAP item 1, DESIGN.md
+§12): under live traffic a plan-cache miss enqueues the build *here* — a
+small pool of daemon worker threads feeding a completion queue — and the
+caller proceeds immediately on a fallback (the cheap synchronous host
+stream, or a queued request).  The expensive part of a device plan is not
+the symbolic phase itself but what hangs off it: the device lift of the
+product stream and the XLA compile of the jitted numeric function.
+``warm=True`` (the default) forces both inside the worker, so by the time
+a build completes the serving thread's next call is a pure compiled
+replay.
+
+All builds go through :func:`repro.core.api.cached_plan`, i.e. the shared
+locked plan LRU — the single-flight protocol there guarantees a build
+racing a foreground request runs the symbolic phase once, whichever
+thread gets there first.  The builder adds its own layer of dedup on top
+(``submit`` of a key already queued or building is a no-op) so a hot
+pattern arriving on every tick does not flood the queue, and a
+``max_pending`` bound sheds excess work under adversarial all-miss
+traffic instead of growing the queue without bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core import api
+
+
+@dataclasses.dataclass
+class BuildResult:
+    """One completed background task, as drained from :meth:`poll`."""
+
+    tag: Any
+    key: Optional[tuple]
+    plan: Any = None
+    error: Optional[BaseException] = None
+    seconds: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+def warm_plan(plan) -> None:
+    """Materialize a plan's expensive lazy state inside the builder.
+
+    Touches the host product stream (the §9 lazy build), and on
+    stream-capable device backends also lifts the device arrays and runs
+    one throwaway numeric execution so XLA compiles the jitted stream
+    function (§10) — the state a serving tick would otherwise pay for on
+    first use.  Guarded plans (``plan.stream is None``) have nothing to
+    warm.  Safe to call on any plan; unknown plan types are ignored.
+    """
+    stream = getattr(plan, "stream", None)
+    if stream is None:
+        return
+    if getattr(plan, "backend", None) == "jax":
+        a_nnz = int(plan.a.col_ptr[-1])
+        b_nnz = int(plan.b.col_ptr[-1])
+        out = plan.stream_apply(np.zeros(a_nnz, np.float32),
+                                np.zeros(b_nnz, np.float32))
+        out.block_until_ready()
+
+
+class PlanBuilder:
+    """Thread-pool plan builder with a completion queue.
+
+    ::
+
+        builder = PlanBuilder()
+        builder.submit(a, b, "expand", backend="jax")   # non-blocking
+        ...
+        for res in builder.poll():                      # drain completions
+            ...
+        plan, status = builder.plan_or_fallback(a, b, "expand")
+
+    ``workers=1`` (the default) keeps device compiles serialized — XLA
+    compilation is itself internally parallel, and serving cares about
+    the *foreground* tick latency, not build throughput.  All workers are
+    daemon threads; call :meth:`shutdown` (or use the context manager) for
+    a deterministic drain.
+    """
+
+    def __init__(self, workers: int = 1, max_pending: int | None = None):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._q: "queue.Queue" = queue.Queue()
+        self._completions: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._inflight: set = set()     # plan keys queued or building
+        self._pending = 0               # tasks queued or running
+        self._stopped = False
+        self.max_pending = max_pending
+        self.stats = {"submitted": 0, "completed": 0, "failed": 0,
+                      "deduped": 0, "shed": 0, "cached": 0}
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"plan-builder-{i}")
+            for i in range(workers)]
+        for t in self._threads:
+            t.start()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, a, b, method: str | None = None, *,
+               backend: str = "jax", t: float | None = None,
+               b_min: int | None = None, b_max: int | None = None,
+               stream_limit: int | None = None, warm: bool = True,
+               tag: Any = None) -> str:
+        """Enqueue a background build of ``cached_plan(a, b, method, ...)``.
+
+        Returns a status string, never blocks on the build itself:
+
+        * ``"cached"``    — the plan is already in the LRU; nothing queued.
+        * ``"inflight"``  — the same key is already queued or building.
+        * ``"shed"``      — ``max_pending`` reached; the build was dropped
+          (the caller keeps using its fallback and may resubmit later).
+        * ``"submitted"`` — queued; a :class:`BuildResult` will appear in
+          :meth:`poll` when it lands in the LRU.
+        """
+        key = api.plan_cache_key(a, b, method, backend=backend, t=t,
+                                 b_min=b_min, b_max=b_max,
+                                 stream_limit=stream_limit)
+        if api.plan_cache_peek(key) is not None:
+            self.stats["cached"] += 1
+            return "cached"
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("PlanBuilder is shut down")
+            if key in self._inflight:
+                self.stats["deduped"] += 1
+                return "inflight"
+            if self.max_pending is not None \
+                    and self._pending >= self.max_pending:
+                self.stats["shed"] += 1
+                return "shed"
+            self._inflight.add(key)
+            self._pending += 1
+            self.stats["submitted"] += 1
+
+        def build():
+            plan = api.cached_plan(a, b, method, backend=backend, t=t,
+                                   b_min=b_min, b_max=b_max,
+                                   stream_limit=stream_limit)
+            if warm:
+                warm_plan(plan)
+            return plan
+
+        self._q.put((key if tag is None else tag, key, build))
+        return "submitted"
+
+    def submit_task(self, fn: Callable[[], Any], tag: Any = None) -> str:
+        """Enqueue an arbitrary warm job (no key dedup).
+
+        The serving engine uses this to trace + compile its jitted sparse
+        decode step in the background (every overlay plan builds through
+        the locked LRU as a side effect).  The callable's return value
+        rides in ``BuildResult.plan``.
+        """
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("PlanBuilder is shut down")
+            if self.max_pending is not None \
+                    and self._pending >= self.max_pending:
+                self.stats["shed"] += 1
+                return "shed"
+            self._pending += 1
+            self.stats["submitted"] += 1
+        self._q.put((tag, None, fn))
+        return "submitted"
+
+    def plan_or_fallback(self, a, b, method: str | None = None, *,
+                         backend: str = "jax",
+                         fallback_backend: str = "host",
+                         stream_limit: int | None = None,
+                         warm: bool = True):
+        """Non-blocking plan fetch for a latency-critical tick.
+
+        Probes the LRU for the ``backend`` plan without mutating it; on a
+        miss, enqueues the background build and synchronously returns the
+        cheap ``fallback_backend`` plan instead (host symbolic phase only —
+        no device lift, no XLA compile).  Returns ``(plan, status)`` with
+        status ``"ready"`` (device plan served) or ``"fallback"``.
+        """
+        key = api.plan_cache_key(a, b, method, backend=backend,
+                                 stream_limit=stream_limit)
+        plan = api.plan_cache_peek(key)
+        if plan is not None:
+            return plan, "ready"
+        self.submit(a, b, method, backend=backend,
+                    stream_limit=stream_limit, warm=warm)
+        fb = api.cached_plan(a, b, method, backend=fallback_backend,
+                             stream_limit=stream_limit)
+        return fb, "fallback"
+
+    # -- completion / lifecycle ----------------------------------------------
+
+    def poll(self) -> list:
+        """Drain the completion queue (non-blocking)."""
+        out = []
+        while True:
+            try:
+                out.append(self._completions.get_nowait())
+            except queue.Empty:
+                return out
+
+    def pending(self) -> int:
+        with self._lock:
+            return self._pending
+
+    def wait_idle(self, timeout: float | None = None) -> bool:
+        """Block until every queued/running task completed (tests, drain)."""
+        with self._cv:
+            return self._cv.wait_for(lambda: self._pending == 0, timeout)
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop accepting work; optionally drain the queue and join."""
+        with self._lock:
+            if self._stopped:
+                return
+            self._stopped = True
+        if not wait:
+            # unblock workers with one sentinel each; queued tasks that
+            # run anyway are harmless (they only populate the shared LRU)
+            for _ in self._threads:
+                self._q.put(None)
+            return
+        for _ in self._threads:
+            self._q.put(None)
+        for t in self._threads:
+            t.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
+    def _worker(self) -> None:
+        while True:
+            task = self._q.get()
+            if task is None:
+                return
+            tag, key, fn = task
+            t0 = time.perf_counter()
+            plan, err = None, None
+            try:
+                plan = fn()
+            except BaseException as e:  # noqa: BLE001 — reported via poll()
+                err = e
+            dt = time.perf_counter() - t0
+            with self._cv:
+                if key is not None:
+                    self._inflight.discard(key)
+                self._pending -= 1
+                self.stats["failed" if err is not None
+                           else "completed"] += 1
+                self._cv.notify_all()
+            self._completions.put(BuildResult(tag, key, plan, err, dt))

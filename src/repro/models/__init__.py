@@ -5,13 +5,14 @@ from repro.models.config import (
     ModelConfig, MoEConfig, SSMConfig, ShapeConfig, shapes_for, smoke,
 )
 from repro.models.lm import (
-    abstract_model, backbone, decode_step, init_cache, init_model,
-    model_specs, model_tables, prefill, train_loss,
+    abstract_model, backbone, decode_step, decode_step_loop, init_cache,
+    init_model, model_specs, model_tables, prefill, train_loss,
 )
 
 __all__ = [
     "ALL_SHAPES", "DECODE_32K", "LONG_500K", "PREFILL_32K", "TRAIN_4K",
     "ModelConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "shapes_for",
-    "smoke", "abstract_model", "backbone", "decode_step", "init_cache",
-    "init_model", "model_specs", "model_tables", "prefill", "train_loss",
+    "smoke", "abstract_model", "backbone", "decode_step",
+    "decode_step_loop", "init_cache", "init_model", "model_specs",
+    "model_tables", "prefill", "train_loss",
 ]

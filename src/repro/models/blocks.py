@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import params as pp
 from repro.models.layers import (
@@ -97,8 +98,14 @@ def superblock_table(cfg):
 # ---------------------------------------------------------------------------
 
 
-def _sub_forward(p, shared, cfg, kind, h, *, memory=None, causal=True):
-    """One sub-layer, full sequence. Returns (h, aux_loss)."""
+def _sub_forward(p, shared, cfg, kind, h, *, memory=None, causal=True,
+                 sffn=None):
+    """One sub-layer, full sequence. Returns (h, aux_loss).
+
+    ``sffn`` is this sub-layer's spgemm-path FFN overlay (DESIGN.md §12):
+    a shared-pattern :class:`~repro.models.sparse_ffn.SparseFFN` applied
+    with the rep's value stacks ``p["ffn"]`` in place of the dense SwiGLU.
+    """
     aux = jnp.float32(0)
     if kind in ("attn_ffn", "attn_moe", "attn_ffn_cross", "enc_attn_ffn",
                 "dec_attn_cross_ffn"):
@@ -115,6 +122,8 @@ def _sub_forward(p, shared, cfg, kind, h, *, memory=None, causal=True):
         if kind == "attn_moe":
             aux = moe_aux_loss(p["moe"], cfg, hn)
             h = h + moe_ffn(p["moe"], cfg, hn)
+        elif sffn is not None:
+            h = h + sffn.apply(p["ffn"], hn)
         else:
             h = h + ffn(p["ffn"], hn)
         return h, aux
@@ -132,17 +141,20 @@ def _sub_forward(p, shared, cfg, kind, h, *, memory=None, causal=True):
 
 
 def stage_forward(stacked, shared, cfg, kinds, h, *, memory=None,
-                  causal=True):
+                  causal=True, sparse_ffn=None):
     """Scan the super-block over its reps. Returns (h, total_aux)."""
 
     from repro.distributed.hints import hint
+
+    sparse_ffn = sparse_ffn or {}
 
     def block(carry, p_rep):
         h, aux = carry
         h = hint(h, "dp", None, None)  # pin residual-stream batch sharding
         for i, kind in enumerate(kinds):
             h, a = _sub_forward(p_rep.get(f"l{i}", {}), shared, cfg, kind, h,
-                                memory=memory, causal=causal)
+                                memory=memory, causal=causal,
+                                sffn=sparse_ffn.get(f"l{i}"))
             aux = aux + a
         return (h, aux), None
 
@@ -180,7 +192,8 @@ def sub_cache_shape(cfg, kind, batch, cache_len, dtype=jnp.bfloat16):
     raise ValueError(kind)
 
 
-def _sub_decode(p, shared, cfg, kind, h, cache, cur_len):
+def _sub_decode(p, shared, cfg, kind, h, cache, cur_len, *, sffn=None,
+                sffn_host=False):
     if kind in ("attn_ffn", "attn_moe", "attn_ffn_cross",
                 "dec_attn_cross_ffn"):
         a, ck, cv = attention_decode(
@@ -198,6 +211,13 @@ def _sub_decode(p, shared, cfg, kind, h, cache, cur_len):
         hn = rms_norm(p["ln2"], h, cfg.norm_eps)
         if kind == "attn_moe":
             h = h + moe_ffn(p["moe"], cfg, hn)
+        elif sffn is not None:
+            # spgemm-path FFN overlay (DESIGN.md §12); sffn_host runs the
+            # host product stream on concrete values (the serving fallback
+            # while the device plans warm — eager loop decode only)
+            y = (sffn.apply_host(p["ffn"], np.asarray(hn)) if sffn_host
+                 else sffn.apply(p["ffn"], hn))
+            h = h + jnp.asarray(y, h.dtype)
         else:
             h = h + ffn(p["ffn"], hn)
         return h, cache
@@ -217,8 +237,11 @@ def _sub_decode(p, shared, cfg, kind, h, cache, cur_len):
     raise ValueError(kind)
 
 
-def stage_decode(stacked, shared, cfg, kinds, h, caches, cur_len):
+def stage_decode(stacked, shared, cfg, kinds, h, caches, cur_len, *,
+                 sparse_ffn=None):
     """Scan decode over reps; caches stacked on the rep axis."""
+
+    sparse_ffn = sparse_ffn or {}
 
     def block(h, pc):
         p_rep, c_rep = pc
@@ -226,10 +249,39 @@ def stage_decode(stacked, shared, cfg, kinds, h, caches, cur_len):
         for i, kind in enumerate(kinds):
             h, new_c[f"l{i}"] = _sub_decode(
                 p_rep.get(f"l{i}", {}), shared, cfg, kind, h,
-                c_rep[f"l{i}"], cur_len)
+                c_rep[f"l{i}"], cur_len, sffn=sparse_ffn.get(f"l{i}"))
         return h, new_c
 
     h, new_caches = jax.lax.scan(block, h, (stacked, caches))
+    return h, new_caches
+
+
+def stage_decode_loop(stacked, shared, cfg, kinds, h, caches, cur_len, *,
+                      sparse_ffn=None, sparse_host=True):
+    """Eager python-loop spelling of :func:`stage_decode` (no scan).
+
+    The serving fallback path (DESIGN.md §12): while the jitted sparse
+    decode step is still tracing/compiling in the background, ticks run
+    this loop on concrete values — same math, sub-layer by sub-layer, with
+    overlay FFNs on the *host* product stream (``sparse_host=True``) so
+    nothing on the tick waits for a device plan build.  Never call under a
+    trace (the host FFN needs concrete operands).
+    """
+    sparse_ffn = sparse_ffn or {}
+    n_rep = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    per_rep = []
+    for r in range(n_rep):
+        p_rep = jax.tree_util.tree_map(lambda a: a[r], stacked)
+        c_rep = jax.tree_util.tree_map(lambda a: a[r], caches)
+        new_c = {}
+        for i, kind in enumerate(kinds):
+            h, new_c[f"l{i}"] = _sub_decode(
+                p_rep.get(f"l{i}", {}), shared, cfg, kind, h,
+                c_rep[f"l{i}"], cur_len, sffn=sparse_ffn.get(f"l{i}"),
+                sffn_host=sparse_host)
+        per_rep.append(new_c)
+    new_caches = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *per_rep)
     return h, new_caches
 
 

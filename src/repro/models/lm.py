@@ -16,8 +16,8 @@ import jax.numpy as jnp
 
 from repro.models import params as pp
 from repro.models.blocks import (
-    block_structure, stage_cache, stage_decode, stage_forward,
-    superblock_table,
+    block_structure, stage_cache, stage_decode, stage_decode_loop,
+    stage_forward, superblock_table,
 )
 from repro.models.layers import (
     attention_table, embed, embed_table, ffn_table, lm_logits, lm_loss,
@@ -80,25 +80,31 @@ def _memory_from_aux(params, cfg, aux):
     return None
 
 
-def backbone(params, cfg, tokens, aux=None):
-    """tokens [B,S] -> final-normed hidden [B,S,D] (+ MoE aux loss)."""
+def backbone(params, cfg, tokens, aux=None, *, sparse_ffn=None):
+    """tokens [B,S] -> final-normed hidden [B,S,D] (+ MoE aux loss).
+
+    ``sparse_ffn`` is the spgemm-path FFN overlay from
+    :func:`~repro.models.sparse_ffn.sparsify_ffn_params` (DESIGN.md §12).
+    """
     h = embed(params["embed"], tokens)
     memory = _memory_from_aux(params, cfg, aux)
     _, kinds, _, _ = superblock_table(cfg)
     h, aux_loss = stage_forward(
-        params["blocks"], params.get("shared"), cfg, kinds, h, memory=memory)
+        params["blocks"], params.get("shared"), cfg, kinds, h, memory=memory,
+        sparse_ffn=sparse_ffn)
     return rms_norm(params["final_norm"], h, cfg.norm_eps), aux_loss
 
 
-def train_loss(params, cfg, batch):
+def train_loss(params, cfg, batch, *, sparse_ffn=None):
     """batch: dict(tokens [B,S], labels [B,S], aux?) -> scalar loss."""
-    h, aux_loss = backbone(params, cfg, batch["tokens"], batch.get("aux"))
+    h, aux_loss = backbone(params, cfg, batch["tokens"], batch.get("aux"),
+                           sparse_ffn=sparse_ffn)
     loss = lm_loss(params["unembed"], cfg, h, batch["labels"])
     return loss + AUX_COEF * aux_loss.astype(loss.dtype)
 
 
-def prefill(params, cfg, tokens, aux=None):
-    h, _ = backbone(params, cfg, tokens, aux)
+def prefill(params, cfg, tokens, aux=None, *, sparse_ffn=None):
+    h, _ = backbone(params, cfg, tokens, aux, sparse_ffn=sparse_ffn)
     return h
 
 
@@ -112,15 +118,36 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
     return stage_cache(cfg, kinds, n_rep, batch, cache_len, dtype)
 
 
-def decode_step(params, cfg, token, cache, cur_len):
+def decode_step(params, cfg, token, cache, cur_len, *, sparse_ffn=None):
     """token [B,1] int32 -> (logits [B,1,Vpad], new_cache).
 
-    cur_len: scalar count of tokens already in the cache.
+    cur_len: scalar count of tokens already in the cache.  ``sparse_ffn``
+    is the spgemm-path FFN overlay (DESIGN.md §12): each overlaid
+    sub-layer's FFN runs the cached SpGEMM device stream on its rep's
+    value stacks instead of the dense SwiGLU.
     """
     h = embed(params["embed"], token)
     _, kinds, _, _ = superblock_table(cfg)
     h, new_cache = stage_decode(
         params["blocks"], params.get("shared"), cfg, kinds, h, cache,
-        cur_len)
+        cur_len, sparse_ffn=sparse_ffn)
+    h = rms_norm(params["final_norm"], h, cfg.norm_eps)
+    return lm_logits(params["unembed"], cfg, h), new_cache
+
+
+def decode_step_loop(params, cfg, token, cache, cur_len, *,
+                     sparse_ffn=None, sparse_host=True):
+    """Eager (no scan, no jit) spelling of :func:`decode_step`.
+
+    The serving fallback tick (DESIGN.md §12): runs on concrete values
+    with overlay FFNs on the *host* product stream, so it never waits on
+    a device plan build or XLA compile in flight on the background
+    builder.  Same signature/return as :func:`decode_step`.
+    """
+    h = embed(params["embed"], token)
+    _, kinds, _, _ = superblock_table(cfg)
+    h, new_cache = stage_decode_loop(
+        params["blocks"], params.get("shared"), cfg, kinds, h, cache,
+        cur_len, sparse_ffn=sparse_ffn, sparse_host=sparse_host)
     h = rms_norm(params["final_norm"], h, cfg.norm_eps)
     return lm_logits(params["unembed"], cfg, h), new_cache

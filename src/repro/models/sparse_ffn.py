@@ -104,6 +104,41 @@ class SparseMatmul:
         return cls("bsr", None, jnp.asarray(bi), jnp.asarray(bn),
                    jnp.asarray(blocks), (m, k), density)
 
+    @classmethod
+    def from_shared_pattern(cls, w_stack, *, keep_density=0.5,
+                            stream_limit: int | None = None):
+        """Shared-pattern spgemm matmuls for a stack of same-shape weights.
+
+        The serving-engine regime (DESIGN.md §12): scanned super-blocks
+        need every repeated layer to share *one* CSC structure so the scan
+        body traces once and all reps replay the same cached plan — the
+        paper's static pre-processing contract, batched over depth.
+        ``w_stack`` is ``[R, m, k]`` in ``W @ x`` orientation; pruning
+        keeps the element positions whose rep-wise max magnitude lands in
+        the top ``keep_density`` fraction (element granularity: one mask
+        must serve every rep, so block-local magnitudes of a single layer
+        cannot decide it).  Returns ``(matmul, values)`` where ``matmul``
+        holds rep 0's values and ``values`` is the ``[R, nnz]`` trainable
+        stack in the pattern's CSC (column-major) order.
+        """
+        w = np.asarray(w_stack, np.float32)
+        if w.ndim != 3:
+            raise ValueError(f"w_stack must be [R, m, k], got {w.shape}")
+        _, m, k = w.shape
+        mag = np.abs(w).max(axis=0)
+        n_keep = max(1, int(round(keep_density * m * k)))
+        thresh = np.partition(mag.reshape(-1), -n_keep)[-n_keep]
+        cols, rows = np.nonzero((mag >= thresh).T)   # CSC coordinate order
+        col_ptr = np.zeros(k + 1, np.int64)
+        np.cumsum(np.bincount(cols, minlength=k), out=col_ptr[1:])
+        values = w[:, rows, cols]                    # [R, nnz], CSC order
+        csc = CSC(jnp.asarray(values[0]), rows.astype(np.int32),
+                  col_ptr.astype(np.int32), (m, k))
+        mat = cls("spgemm", None, None, None, None, (m, k),
+                  float(rows.size / (m * k)), w_csc=csc,
+                  stream_limit=stream_limit)
+        return mat, jnp.asarray(values)
+
     # -- spgemm path (DESIGN.md §10) -------------------------------------
 
     @property
@@ -115,19 +150,22 @@ class SparseMatmul:
                 f"(this matmul runs path={self.path!r})")
         return self.w_csc.values
 
-    def _spgemm_plan(self, n: int):
+    def _spgemm_plan(self, n: int, backend: str = "jax"):
         """Plan W @ X for X dense [K, N], memoized per token count.
 
         The activation operand is a *fully dense* pattern — its structure
         depends only on (K, N), so the symbolic phase runs once per
         distinct N (at trace time) and the numeric phase is the plan's
-        jitted device stream.  Returns ``(plan, scatter_rows,
-        scatter_cols)`` where the scatter indices densify the canonical
-        CSC result into ``[M, N]`` (plan-static numpy, free under jit).
+        jitted device stream (``backend="jax"``) or the vectorized numpy
+        stream (``backend="host"``, the serving fallback — DESIGN.md §12).
+        Returns ``(plan, scatter_rows, scatter_cols)`` where the scatter
+        indices densify the canonical CSC result into ``[M, N]``
+        (plan-static numpy, free under jit).
         """
-        if n in self._spgemm_memo:
-            self._spgemm_memo.move_to_end(n)
-            return self._spgemm_memo[n]
+        memo_key = (n, backend)
+        if memo_key in self._spgemm_memo:
+            self._spgemm_memo.move_to_end(memo_key)
+            return self._spgemm_memo[memo_key]
         from repro.core.api import cached_plan
 
         m, k = self.shape
@@ -137,7 +175,7 @@ class SparseMatmul:
         w_pat = CSC(np.zeros(self.w_csc.nnz, np.float32),
                     self.w_csc.row_indices, self.w_csc.col_ptr,
                     self.shape)
-        plan = cached_plan(w_pat, x_pat, "expand", backend="jax",
+        plan = cached_plan(w_pat, x_pat, "expand", backend=backend,
                            stream_limit=self.stream_limit)
         s = plan.stream
         if s is None:
@@ -147,10 +185,10 @@ class SparseMatmul:
                 "override) or shrink the token block")
         cols = np.repeat(np.arange(n, dtype=np.int32),
                          np.diff(s.c_col_ptr))
-        self._spgemm_memo[n] = (plan, s.c_rows, cols)
+        self._spgemm_memo[memo_key] = (plan, s.c_rows, cols)
         while len(self._spgemm_memo) > self.SPGEMM_MEMO_SIZE:
             self._spgemm_memo.popitem(last=False)
-        return self._spgemm_memo[n]
+        return self._spgemm_memo[memo_key]
 
     def apply_values(self, w_values, x):
         """y [M, N] = W @ x for trainable values ``w_values`` (spgemm path).
@@ -172,6 +210,28 @@ class SparseMatmul:
         return jnp.zeros(self.shape[0:1] + (int(n),), c_vals.dtype).at[
             rows, cols].set(c_vals, mode="promise_in_bounds",
                             unique_indices=True)
+
+    def apply_values_host(self, w_values, x) -> np.ndarray:
+        """Host-stream spelling of :meth:`apply_values` (concrete numpy).
+
+        The serving fallback path (DESIGN.md §12): while the device plan
+        is still building/compiling in the background, a decode tick runs
+        the same multiply through the *host* product stream — a cheap
+        synchronous plan on the same LRU, no device lift and no XLA
+        compile on the tick.  Concrete values only (never call under a
+        trace); same contraction order as the host stream engine.
+        """
+        if self.path != "spgemm":
+            raise ValueError(
+                f"apply_values_host needs path='spgemm' (got {self.path!r})")
+        x = np.asarray(x, np.float32)
+        n = x.shape[1]
+        plan, rows, cols = self._spgemm_plan(int(n), backend="host")
+        c = plan.execute(np.asarray(w_values, np.float32),
+                         x.T.reshape(-1), engine="stream")
+        out = np.zeros((self.shape[0], int(n)), np.float32)
+        out[rows, cols] = np.asarray(c.values, np.float32)
+        return out
 
     def __call__(self, x, *, bn=None, interpret=True):
         """y = W @ x for x [K, N]."""
@@ -264,6 +324,23 @@ class SparseFFN:
              * self.up.apply_values(params["up"], xt))
         return self.down.apply_values(params["down"], h).T
 
+    def apply_host(self, params, x) -> np.ndarray:
+        """Host-stream spelling of :meth:`apply` (concrete numpy values).
+
+        The serving fallback (DESIGN.md §12): same SwiGLU dataflow, every
+        matmul through the host product stream via
+        :meth:`SparseMatmul.apply_values_host`.  ``x`` is ``[T, D]`` or a
+        batch ``[B, T, D]``; returns float32 numpy.
+        """
+        x = np.asarray(x, np.float32)
+        if x.ndim == 3:
+            return np.stack([self.apply_host(params, xb) for xb in x])
+        xt = x.T                                   # [D, T]
+        g = self.gate.apply_values_host(params["gate"], xt)
+        u = self.up.apply_values_host(params["up"], xt)
+        h = (g / (1.0 + np.exp(-g))) * u           # numpy silu
+        return self.down.apply_values_host(params["down"], h).T
+
     def __call__(self, x):
         """x [T, D] -> [T, D], or a batch [B, T, D] -> [B, T, D].
 
@@ -283,3 +360,87 @@ class SparseFFN:
     def flops_per_token(self) -> int:
         return (self.gate.flops_per_col + self.up.flops_per_col
                 + self.down.flops_per_col)
+
+
+# ---------------------------------------------------------------------------
+# serving integration (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def sparsify_ffn_params(cfg, params, *, keep_density=0.5,
+                        stream_limit: int | None = None):
+    """Convert every scanned FFN sub-layer of a model to ``path="spgemm"``.
+
+    The serving-engine entry point (DESIGN.md §12): walks the model's
+    super-block table and, for each sub-layer carrying a dense SwiGLU
+    ``ffn`` subtree (kinds ``attn_ffn`` / ``attn_ffn_cross`` / ...),
+    replaces its stacked ``[n_rep, d_in, d_out]`` weight leaves with CSC
+    value stacks ``{"gate"/"up"/"down": [n_rep, nnz]}`` on a pattern
+    *shared across the scanned reps* (:meth:`SparseMatmul
+    .from_shared_pattern` — one mask per matrix, so the scan body traces
+    once and all reps replay one cached plan).  MoE and shared-table
+    sub-layers are left dense.
+
+    Returns ``(new_params, overlay)``: ``new_params`` is the params pytree
+    with the sparse value stacks spliced in, ``overlay`` maps sub-layer
+    keys ``"l{i}"`` to the pattern-holding :class:`SparseFFN` that
+    ``decode_step(..., sparse_ffn=overlay)`` (and ``ServeEngine``) applies
+    with each rep's values.  Raises if the config has no scanned FFN
+    sub-layer to convert.
+    """
+    from repro.models.blocks import superblock_table
+
+    _, kinds, _, _ = superblock_table(cfg)
+    overlay = {}
+    new_blocks = dict(params["blocks"])
+    for i, _kind in enumerate(kinds):
+        li = f"l{i}"
+        sub = params["blocks"].get(li, {})
+        if "ffn" not in sub:
+            continue
+        fp = sub["ffn"]
+
+        def shared(name):
+            w = np.asarray(fp[name]["w"])        # [R, d_in, d_out]
+            return SparseMatmul.from_shared_pattern(
+                w.transpose(0, 2, 1),            # -> W @ x orientation
+                keep_density=keep_density, stream_limit=stream_limit)
+
+        gate, gv = shared("gate")
+        up, uv = shared("up")
+        down, dv = shared("down")
+        overlay[li] = SparseFFN(gate, up, down)
+        new_blocks[li] = dict(sub, ffn={"gate": gv, "up": uv, "down": dv})
+    if not overlay:
+        raise ValueError(
+            f"config {cfg.name!r} (family {cfg.family!r}) has no scanned "
+            "dense-FFN sub-layer to convert to path='spgemm'")
+    return dict(params, blocks=new_blocks), overlay
+
+
+def densify_ffn_params(cfg, params, overlay):
+    """Inverse view of :func:`sparsify_ffn_params` for reference checks.
+
+    Scatters each overlay matrix's ``[n_rep, nnz]`` value stacks back into
+    dense ``[n_rep, d_in, d_out]`` weight leaves (zeros at pruned
+    positions), so a plain dense ``decode_step`` over the result is the
+    numerical oracle for the sparse decode path (tests, and the honesty
+    check in ``benchmarks/serving_spgemm.py``).
+    """
+    new_blocks = dict(params["blocks"])
+    for li, sffn in overlay.items():
+        vals = params["blocks"][li]["ffn"]
+        dense = {}
+        for name, mat in (("gate", sffn.gate), ("up", sffn.up),
+                          ("down", sffn.down)):
+            c = mat.w_csc
+            rows = np.asarray(c.row_indices)[: c.nnz]
+            cols = np.repeat(np.arange(c.shape[1], dtype=np.int32),
+                             np.diff(np.asarray(c.col_ptr)))
+            v = np.asarray(vals[name], np.float32)        # [R, nnz]
+            w = np.zeros((v.shape[0],) + tuple(c.shape), np.float32)
+            w[:, rows, cols] = v
+            # back to the param table's [R, d_in, d_out] orientation
+            dense[name] = {"w": jnp.asarray(w.transpose(0, 2, 1))}
+        new_blocks[li] = dict(new_blocks[li], ffn=dense)
+    return dict(params, blocks=new_blocks)

@@ -6,11 +6,20 @@ Fixed batch of slots; each decode tick feeds every active slot its next token
 mid-flight; finished requests (EOS / max tokens) free theirs. This is
 decode-granularity continuous batching — production chunked prefill is an
 orthogonal extension, noted in DESIGN.md.
+
+Stream-backed sparse serving (DESIGN.md §12): pass ``sparse_ffn`` (the
+overlay from :func:`~repro.models.sparse_ffn.sparsify_ffn_params`) and the
+jitted step runs each overlaid FFN on the cached SpGEMM device stream.
+With a ``plan_builder``, the trace + XLA compile of that step happens on a
+background thread; until it lands, ticks fall back to the eager host
+product stream (:func:`~repro.models.lm.decode_step_loop`) so no tick ever
+blocks on a plan build.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import deque
 from typing import Optional
 
@@ -18,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.lm import decode_step, init_cache
+from repro.models.lm import decode_step, decode_step_loop, init_cache
 
 
 @dataclasses.dataclass
@@ -35,7 +44,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg, params, *, max_batch: int = 4,
-                 cache_len: int = 256, seed: int = 0, aux=None):
+                 cache_len: int = 256, seed: int = 0, aux=None,
+                 sparse_ffn=None, plan_builder=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -51,8 +61,44 @@ class ServeEngine:
         self.finished: dict[int, Request] = {}
         self.rng = np.random.default_rng(seed)
         self._rid = 0
+        self.sparse_ffn = sparse_ffn
+        self.plan_builder = plan_builder
+        self.tick_stats = {"jit_ticks": 0, "fallback_ticks": 0}
         self._step = jax.jit(
-            lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+            lambda p, t, c, l: decode_step(p, cfg, t, c, l,
+                                           sparse_ffn=sparse_ffn))
+        self._sparse_ready = threading.Event()
+        if sparse_ffn is None or plan_builder is None:
+            # No overlay (plain dense serving) or no builder to hide the
+            # compile behind — first jitted tick pays it inline, as before.
+            self._sparse_ready.set()
+        else:
+            plan_builder.submit_task(self._warm_sparse_step,
+                                     tag=("serve-warm", id(self)))
+
+    def _warm_sparse_step(self):
+        """Background warm: trace + compile the jitted sparse step.
+
+        Runs on a PlanBuilder worker thread against throwaway zero inputs
+        of serving shape; every overlay plan builds through the locked LRU
+        as a side effect.  Sets ``_sparse_ready`` so the next tick promotes
+        from the host fallback to the compiled device step.
+        """
+        cache0 = init_cache(self.cfg, self.max_batch, self.cache_len,
+                            dtype=jnp.float32)
+        tok0 = jnp.zeros((self.max_batch, 1), jnp.int32)
+        len0 = jnp.zeros(self.max_batch, jnp.int32)
+        out = self._step(self.params, tok0, cache0, len0)
+        jax.block_until_ready(out)
+        self._sparse_ready.set()
+
+    def sparse_ready(self) -> bool:
+        """True once ticks run the compiled (jitted) decode step."""
+        return self._sparse_ready.is_set()
+
+    def wait_sparse(self, timeout: float | None = None) -> bool:
+        """Block until the background warm finishes (tests, benchmarks)."""
+        return self._sparse_ready.wait(timeout)
 
     def _install_memory(self, aux):
         """Precompute cross K/V from stub embeddings into the cache."""
@@ -86,8 +132,23 @@ class ServeEngine:
 
     def submit(self, prompt, max_new_tokens=32, temperature=0.0,
                eos_id=None) -> int:
+        prompt = list(prompt)
+        if not prompt:
+            # An empty prompt has no token to feed the first tick and no
+            # last-generated token to resample — _next_tokens would crash
+            # mid-flight. Reject at the API boundary instead.
+            raise ValueError("empty prompt: a request needs >= 1 token")
+        if len(prompt) > self.cache_len - 1:
+            # The KV cache holds cache_len positions and the engine retires
+            # a slot once cur_len hits cache_len - 1, so a longer prompt
+            # could never produce a token — it would overrun the cache
+            # during prefill. Reject up front rather than corrupting state.
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens cannot fit: cache_len="
+                f"{self.cache_len} leaves room for at most "
+                f"{self.cache_len - 1} prompt tokens")
         self._rid += 1
-        self.queue.append(Request(self._rid, list(prompt), max_new_tokens,
+        self.queue.append(Request(self._rid, prompt, max_new_tokens,
                                   temperature, eos_id))
         return self._rid
 
@@ -116,10 +177,26 @@ class ServeEngine:
         self._admit()
         if all(s is None for s in self.slots):
             return False
+        for b, req in enumerate(self.slots):
+            if req is not None and self.cur_len[b] >= self.cache_len:
+                raise AssertionError(
+                    f"slot {b} would write past its KV cache "
+                    f"(cur_len={self.cur_len[b]}, cache_len="
+                    f"{self.cache_len}); submit() bounds were bypassed")
         toks = self._next_tokens()
-        logits, self.cache = self._step(
-            self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(self.cur_len))
+        if self._sparse_ready.is_set():
+            logits, self.cache = self._step(
+                self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(self.cur_len))
+            self.tick_stats["jit_ticks"] += 1
+        else:
+            # Background warm still in flight: eager host-stream tick
+            # (DESIGN.md §12) — never blocks on the plan build/compile.
+            logits, self.cache = decode_step_loop(
+                self.params, self.cfg, jnp.asarray(toks), self.cache,
+                jnp.asarray(self.cur_len), sparse_ffn=self.sparse_ffn,
+                sparse_host=True)
+            self.tick_stats["fallback_ticks"] += 1
         logits = np.asarray(logits[:, 0, : self.cfg.vocab], np.float32)
         for b, req in enumerate(self.slots):
             if req is None:

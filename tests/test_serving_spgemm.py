@@ -1,0 +1,198 @@
+"""Serving under stream-backed SpGEMM + the engine's boundary bugfixes.
+
+Covers the ISSUE 7 regressions (empty prompt, prompt/cache bounds) and the
+DESIGN.md §12 serving protocol: spgemm-overlaid FFNs in the jitted decode
+step, the eager host-stream fallback tick while the background warm is in
+flight, and promotion to the compiled step afterwards — with the decode
+results independent of which path served which tick.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import PlanBuilder
+from repro.models import (
+    decode_step, decode_step_loop, init_cache, init_model, smoke,
+)
+from repro.models.sparse_ffn import densify_ffn_params, sparsify_ffn_params
+from repro.serving import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = smoke(ARCHS["qwen2-0.5b"])
+    params = init_model(cfg, KEY)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def sparse_model(small_model):
+    cfg, params = small_model
+    sparse_params, overlay = sparsify_ffn_params(cfg, params,
+                                                 keep_density=0.5)
+    return cfg, sparse_params, overlay
+
+
+# ---------------------------------------------------------------------------
+# request-boundary regressions (satellites 1 + 2)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_prompt_rejected_at_submit(small_model):
+    """Regression: an empty prompt used to be admitted and then crash
+    _next_tokens mid-flight (IndexError on req.generated[-1])."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    assert not eng.queue  # nothing admitted
+
+
+def test_oversize_prompt_rejected_at_submit(small_model):
+    """Regression: a prompt longer than the KV cache used to be admitted
+    and overrun the cache during prefill."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=16)
+    with pytest.raises(ValueError, match="cannot fit"):
+        eng.submit(list(range(16)))
+    assert not eng.queue
+
+
+def test_prompt_exactly_cache_minus_one(small_model):
+    """The largest admissible prompt prefills fully and still produces a
+    token before the slot retires at the cache bound."""
+    cfg, params = small_model
+    cache_len = 16
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=cache_len)
+    rid = eng.submit(list(range(1, cache_len)), max_new_tokens=8)
+    done = eng.run_to_completion()
+    req = done[rid]
+    assert len(req.generated) == 1  # room for exactly one generated token
+    assert req.done
+
+
+def test_eos_on_first_sampled_token(small_model):
+    """EOS fired by the very first generated token retires the request
+    with exactly that one token."""
+    cfg, params = small_model
+    probe = ServeEngine(cfg, params, max_batch=1, cache_len=32)
+    probe.submit([3, 4], max_new_tokens=1)
+    eos = list(probe.run_to_completion().values())[0].generated[0]
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=32)
+    rid = eng.submit([3, 4], max_new_tokens=10, eos_id=eos)
+    done = eng.run_to_completion()
+    assert done[rid].generated == [eos]
+    assert done[rid].done
+
+
+def test_slot_reuse_is_deterministic(small_model):
+    """A slot freed by a finished request serves the next request with no
+    state leaking from the previous occupant."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=1, cache_len=32)
+    rids = [eng.submit([7, 8, 9], max_new_tokens=4) for _ in range(3)]
+    done = eng.run_to_completion()
+    gens = [done[r].generated for r in rids]
+    assert gens[0] == gens[1] == gens[2]
+
+
+# ---------------------------------------------------------------------------
+# sparse decode correctness (tentpole: spgemm FFNs inside decode)
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_decode_matches_dense_reference(sparse_model):
+    """decode_step with the spgemm overlay == decode_step on the densified
+    weights, for the scanned, eager-loop, and jitted spellings."""
+    cfg, sparse_params, overlay = sparse_model
+    dense_ref = densify_ffn_params(cfg, sparse_params, overlay)
+    cache = init_cache(cfg, 2, 16, jnp.float32)
+    tok = jnp.array([[3], [5]], jnp.int32)
+    cur = jnp.zeros(2, jnp.int32)
+
+    ref, _ = decode_step(dense_ref, cfg, tok, cache, cur)
+    got, _ = decode_step(sparse_params, cfg, tok, cache, cur,
+                         sparse_ffn=overlay)
+    loop, _ = decode_step_loop(sparse_params, cfg, tok, cache, cur,
+                               sparse_ffn=overlay, sparse_host=True)
+    jitted, _ = jax.jit(
+        lambda p, t, c, l: decode_step(p, cfg, t, c, l,
+                                       sparse_ffn=overlay)
+    )(sparse_params, tok, cache, cur)
+
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(loop, got, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(jitted), np.asarray(got))
+
+
+def test_sparse_engine_plain_serving(sparse_model):
+    """No builder: the engine serves the overlay synchronously (ready from
+    tick 0) and produces valid tokens."""
+    cfg, sparse_params, overlay = sparse_model
+    eng = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                      sparse_ffn=overlay)
+    assert eng.sparse_ready()
+    rid = eng.submit([1, 2, 3], max_new_tokens=4)
+    done = eng.run_to_completion()
+    assert len(done[rid].generated) == 4
+    assert all(0 <= t < cfg.vocab for t in done[rid].generated)
+    assert eng.tick_stats["fallback_ticks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the async warm protocol (tentpole: ticks never block on plan builds)
+# ---------------------------------------------------------------------------
+
+
+def test_tick_completes_while_build_in_flight(sparse_model):
+    """Acceptance test: with the background warm held in flight (worker
+    pinned behind a gate), decode ticks still complete — on the fallback
+    path — and the engine promotes to the jitted step once the warm lands,
+    generating the same tokens as a jit-only run."""
+    cfg, sparse_params, overlay = sparse_model
+    gate = threading.Event()
+    with PlanBuilder() as builder:
+        builder.submit_task(gate.wait, tag="gate")  # warm cannot start
+        eng = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                          sparse_ffn=overlay, plan_builder=builder)
+        assert not eng.sparse_ready()
+        rid = eng.submit([1, 2, 3], max_new_tokens=6)
+        for _ in range(3):
+            assert eng.step()  # completes with the build still gated
+        assert eng.tick_stats["fallback_ticks"] == 3
+        assert eng.tick_stats["jit_ticks"] == 0
+        assert not eng.sparse_ready()
+
+        gate.set()
+        assert eng.wait_sparse(120)
+        done = eng.run_to_completion()
+        assert eng.tick_stats["jit_ticks"] > 0
+    mixed_gen = done[rid].generated
+    assert len(mixed_gen) == 6
+
+    # jit-only reference run: same request, warm path from the start
+    ref = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                      sparse_ffn=overlay)
+    rid2 = ref.submit([1, 2, 3], max_new_tokens=6)
+    assert ref.run_to_completion()[rid2].generated == mixed_gen
+
+
+def test_dense_engine_unaffected_by_builder(small_model):
+    """A dense engine handed a builder stays on the jitted path — there is
+    nothing to warm — and behaves exactly as without one."""
+    cfg, params = small_model
+    with PlanBuilder() as builder:
+        eng = ServeEngine(cfg, params, max_batch=1, cache_len=32,
+                          plan_builder=builder)
+        assert eng.sparse_ready()
+        rid = eng.submit([5, 6], max_new_tokens=3)
+        done = eng.run_to_completion()
+    assert eng.tick_stats["fallback_ticks"] == 0
+    assert len(done[rid].generated) == 3
