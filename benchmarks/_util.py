@@ -25,8 +25,30 @@ def median_time(fn, reps: int) -> float:
     return statistics.median(out)
 
 
+def env_info() -> dict:
+    """Execution-environment header recorded in every BENCH JSON.
+
+    Device count / platform / mesh shape make reports from different
+    machines (and ``--xla_force_host_platform_device_count`` runs)
+    comparable — a distributed number is meaningless without them.
+    """
+    import jax
+
+    devices = jax.devices()
+    return {
+        "device_count": len(devices),
+        "platform": devices[0].platform if devices else "none",
+        "devices": [str(d) for d in devices],
+        "mesh_shape": {"shards": len(devices)},
+        "jax_version": jax.__version__,
+    }
+
+
 def write_report(path: str, report: dict) -> None:
-    """Write a benchmark report as indented JSON and announce it."""
+    """Write a benchmark report as indented JSON (with an ``env`` header
+    recording device count / platform / mesh shape) and announce it."""
+    report = dict(report)
+    report.setdefault("env", env_info())
     with open(path, "w") as f:
         json.dump(report, f, indent=2)
     print(f"\nwrote {path}")

@@ -26,6 +26,8 @@ from repro.core.cost import (
     CostConstants,
     choose_method,
     estimate_cost,
+    estimate_mesh_cost,
+    should_distribute,
 )
 from repro.core.planner import (
     SpgemmPlan,
@@ -61,8 +63,10 @@ from repro.core.api import (
     plan_cache_key,
     plan_cache_peek,
     plan_cache_resize,
+    register_eviction_listener,
     spgemm,
     spgemm_batched,
+    unregister_eviction_listener,
 )
 from repro.core.plan_builder import BuildResult, PlanBuilder, warm_plan
 
@@ -115,6 +119,8 @@ __all__ = [
     "plan_cache_key",
     "plan_cache_peek",
     "plan_cache_resize",
+    "register_eviction_listener",
+    "unregister_eviction_listener",
     "BuildResult",
     "PlanBuilder",
     "warm_plan",
@@ -125,4 +131,6 @@ __all__ = [
     "CostConstants",
     "choose_method",
     "estimate_cost",
+    "estimate_mesh_cost",
+    "should_distribute",
 ]

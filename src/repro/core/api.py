@@ -49,7 +49,19 @@ DEFAULT_METHOD = "h-hash-256/256"
 # resize at runtime with plan_cache_resize()
 PLAN_CACHE_SIZE = 64
 _PLAN_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
-_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0, "wasted_builds": 0}
+
+# keys inserted but never since hit: evicting one of these means the build
+# was pure waste (typically plan_cache_resize() shrinking below the number
+# of in-flight PlanBuilder builds — the build completed into a cache too
+# small to hold it).  Surfaced as the "wasted_builds" counter.
+_NEVER_HIT: set = set()
+
+# callables fn(keys, reason) notified after evictions caused by an explicit
+# plan_cache_resize() shrink (reason="resize"), *outside* the cache lock.
+# Capacity-pressure evictions do not notify — re-warming those would fight
+# the LRU.  Registered by PlanBuilder.enable_rewarm().
+_EVICTION_LISTENERS: list = []
 
 # The LRU locking contract (DESIGN.md §12): every read or write of
 # _PLAN_CACHE/_CACHE_STATS holds _CACHE_LOCK — required since the
@@ -68,9 +80,29 @@ def plan_cache_clear() -> None:
     """Drop all cached plans and reset hit/miss counters."""
     with _CACHE_LOCK:
         _PLAN_CACHE.clear()
-        _CACHE_STATS["hits"] = 0
-        _CACHE_STATS["misses"] = 0
-        _CACHE_STATS["evictions"] = 0
+        _NEVER_HIT.clear()
+        for k in _CACHE_STATS:
+            _CACHE_STATS[k] = 0
+
+
+def register_eviction_listener(fn) -> None:
+    """Register ``fn(keys, reason)`` for post-shrink eviction batches.
+
+    Called *outside* the cache lock after :func:`plan_cache_resize` evicts
+    entries (``reason="resize"``); capacity-pressure evictions from normal
+    inserts never notify.  Listener exceptions are swallowed — eviction is
+    a memory-pressure path and must not fail the resizer.  The standard
+    listener is ``PlanBuilder.enable_rewarm()``, which re-queues the
+    evicted keys' builds (DESIGN.md §12).
+    """
+    if fn not in _EVICTION_LISTENERS:
+        _EVICTION_LISTENERS.append(fn)
+
+
+def unregister_eviction_listener(fn) -> None:
+    """Remove a listener registered by :func:`register_eviction_listener`."""
+    if fn in _EVICTION_LISTENERS:
+        _EVICTION_LISTENERS.remove(fn)
 
 
 def plan_cache_info() -> dict:
@@ -89,13 +121,23 @@ def plan_cache_info() -> dict:
     distinct tile pattern, so watch these numbers (and shrink via
     ``plan_cache_resize`` or a lower guard) when caching large tiled
     workloads.
+
+    ``mesh_stream_bytes`` totals the device-stacked shard-stream index
+    arrays held by mesh-backend plans (DESIGN.md §13) on top of their
+    children's host/device streams (the children are ordinary jax tile
+    plans, counted by the other totals).  ``wasted_builds`` counts evicted
+    entries that were never hit after insertion — a build whose result the
+    cache could not keep, the signature of :func:`plan_cache_resize`
+    shrinking below the number of in-flight ``PlanBuilder`` builds.
     """
     with _CACHE_LOCK:
         lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
         host_seen: dict = {}
         dev_seen: dict = {}
         fused_seen: dict = {}
+        mesh_seen: dict = {}
         for p in _PLAN_CACHE.values():
+            mesh_seen[id(p)] = getattr(p, "mesh_stream_nbytes", 0)
             for sp in [t.plan for t in getattr(p, "tiles", ())] or [p]:
                 host_seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
                 dev_seen[id(sp)] = getattr(sp, "device_stream_nbytes", 0)
@@ -107,7 +149,8 @@ def plan_cache_info() -> dict:
                     in_flight=len(_BUILDING),
                     stream_bytes=sum(host_seen.values()),
                     device_stream_bytes=sum(dev_seen.values()),
-                    fused_stream_bytes=sum(fused_seen.values()))
+                    fused_stream_bytes=sum(fused_seen.values()),
+                    mesh_stream_bytes=sum(mesh_seen.values()))
 
 
 def plan_cache_resize(n: int) -> dict:
@@ -122,12 +165,29 @@ def plan_cache_resize(n: int) -> dict:
     n = int(n)
     if n < 0:
         raise ValueError(f"cache size must be >= 0, got {n}")
+    evicted: list = []
     with _CACHE_LOCK:
         PLAN_CACHE_SIZE = n
         while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
-            _PLAN_CACHE.popitem(last=False)
-            _CACHE_STATS["evictions"] += 1
+            evicted.append(_evict_locked())
+    if evicted:
+        # outside the lock: listeners may re-enter the cache (re-warm)
+        for fn in list(_EVICTION_LISTENERS):
+            try:
+                fn(tuple(evicted), "resize")
+            except Exception:
+                pass
     return plan_cache_info()
+
+
+def _evict_locked():
+    """Pop the LRU head (lock held); accounts eviction + waste, returns key."""
+    key, _ = _PLAN_CACHE.popitem(last=False)
+    _CACHE_STATS["evictions"] += 1
+    if key in _NEVER_HIT:
+        _NEVER_HIT.discard(key)
+        _CACHE_STATS["wasted_builds"] += 1
+    return key
 
 
 def _cache_get(key):
@@ -136,6 +196,7 @@ def _cache_get(key):
         if plan is not None:
             _PLAN_CACHE.move_to_end(key)
             _CACHE_STATS["hits"] += 1
+            _NEVER_HIT.discard(key)
             return plan
         _CACHE_STATS["misses"] += 1
         return None
@@ -144,9 +205,9 @@ def _cache_get(key):
 def _cache_put(key, plan):
     with _CACHE_LOCK:
         _PLAN_CACHE[key] = plan
+        _NEVER_HIT.add(key)
         while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
-            _PLAN_CACHE.popitem(last=False)
-            _CACHE_STATS["evictions"] += 1
+            _evict_locked()
 
 
 def plan_cache_peek(key):
@@ -179,6 +240,7 @@ def _build_once(key, build):
             if plan is not None:
                 _PLAN_CACHE.move_to_end(key)
                 _CACHE_STATS["hits"] += 1
+                _NEVER_HIT.discard(key)
                 return plan
             done = _BUILDING.get(key)
             owner = done is None
@@ -225,20 +287,26 @@ def _single_plan_key(a: CSC, b: CSC, method: str, backend: str,
 def plan_cache_key(a: CSC, b: CSC, method: str | None = None, *,
                    backend: str | None = None, t: float | None = None,
                    b_min: int | None = None, b_max: int | None = None,
-                   stream_limit: int | None = None) -> tuple:
+                   stream_limit: int | None = None,
+                   shards: int | None = None) -> tuple:
     """The LRU key :func:`cached_plan` would use for these arguments.
 
     For non-blocking probes (DESIGN.md §12): compute the key once, then
     :func:`plan_cache_peek` it on the latency path while a background
     :class:`~repro.core.plan_builder.PlanBuilder` owns the build.  Costs
-    two pattern fingerprints (O(nnz)), no plan construction.
+    two pattern fingerprints (O(nnz)), no plan construction.  On
+    ``backend="mesh"`` the key carries the mesh shape (``shards``,
+    defaulting to the visible device count) and the per-shard guard.
     """
     method, backend = _resolve_method_backend(method, backend)
+    _check_shards(backend, shards)
     if method == "auto":
         raise ValueError(
             "plan_cache_key addresses single-method plans; method='auto' "
             "uses the tiled entry points")
     _check_canonical_only(backend, t, b_min, b_max)
+    if backend == "mesh":
+        return _mesh_plan_key(a, b, shards, None, stream_limit)
     return _single_plan_key(a, b, method, backend,
                             resolve_params(method, t=t, b_min=b_min,
                                            b_max=b_max),
@@ -260,7 +328,8 @@ def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
 def cached_plan(a: CSC, b: CSC, method: str | None = None, *,
                 backend: str | None = None, t: float | None = None,
                 b_min: int | None = None, b_max: int | None = None,
-                stream_limit: int | None = None) -> SpgemmPlan:
+                stream_limit: int | None = None,
+                shards: int | None = None) -> SpgemmPlan:
     """Fetch-or-build a plan through the shared LRU (public accessor).
 
     The plan-holding companion of :func:`spgemm`: out-of-package callers
@@ -273,11 +342,14 @@ def cached_plan(a: CSC, b: CSC, method: str | None = None, *,
     key), without mutating the global ``fast.STREAM_MAX_PRODUCTS`` knob.
     """
     method, backend = _resolve_method_backend(method, backend)
+    _check_shards(backend, shards)
     if method == "auto":
         raise ValueError(
             "cached_plan builds single-method plans; use plan_spgemm_tiled "
             "for method='auto'")
     _check_canonical_only(backend, t, b_min, b_max)
+    if backend == "mesh":
+        return _cached_mesh_plan(a, b, shards, None, stream_limit)
     return _cached_plan(a, b, method, backend,
                         resolve_params(method, t=t, b_min=b_min,
                                        b_max=b_max),
@@ -299,6 +371,71 @@ def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,
         key,
         lambda: plan_spgemm_tiled(a, b, backend=backend, tile=tile,
                                   candidates=cands))
+
+
+def _mesh_plan_key(a: CSC, b: CSC, shards, tile,
+                   stream_limit: int | None = None) -> tuple:
+    # the mesh key mirrors _single_plan_key but carries the mesh shape and
+    # grid spec in the params slot: plans for different shard counts (or
+    # per-shard guards) are different placements and must not alias
+    import jax
+
+    n_shards = len(jax.devices()) if shards is None else int(shards)
+    limit = (_fast.STREAM_MAX_PRODUCTS if stream_limit is None
+             else int(stream_limit))
+    params = (("shard_limit", limit), ("shards", n_shards),
+              ("tile", normalize_tile_spec(tile)))
+    return (pattern_fingerprint(a), pattern_fingerprint(b), "expand",
+            "mesh", params, limit)
+
+
+def _cached_mesh_plan(a: CSC, b: CSC, shards=None, tile=None,
+                      stream_limit: int | None = None):
+    key = _mesh_plan_key(a, b, shards, tile, stream_limit)
+    n_shards = dict(key[4])["shards"]
+
+    def build():
+        from repro.distributed.spgemm_mesh import plan_spgemm_mesh
+
+        return plan_spgemm_mesh(a, b, shards=n_shards, tile=tile,
+                                shard_limit=stream_limit)
+
+    return _build_once(key, build)
+
+
+def _auto_mesh_plan(a: CSC, b: CSC, shards, tile, candidates, cache):
+    """``method="auto"`` on the mesh backend: distribute or stay local.
+
+    The communication-aware cost model (``core.cost.should_distribute``)
+    decides: shard when the whole product stream is above the single-device
+    guard (a mesh plan lifts it per shard) or when the mesh estimate beats
+    the single-device stream outright; otherwise fall back to the ordinary
+    single-device jax tile grid, where the per-tile method race still
+    applies.
+    """
+    import jax
+
+    from repro.core.cost import should_distribute
+    from repro.sparse.stats import tile_stats
+
+    n_shards = len(jax.devices()) if shards is None else int(shards)
+    if should_distribute(tile_stats(a, b), n_shards):
+        if cache:
+            return _cached_mesh_plan(a, b, n_shards, tile)
+        from repro.distributed.spgemm_mesh import plan_spgemm_mesh
+
+        return plan_spgemm_mesh(a, b, shards=n_shards, tile=tile,
+                                cache=False)
+    if cache:
+        return _cached_tiled_plan(a, b, "jax", tile, candidates)
+    return plan_spgemm_tiled(a, b, backend="jax", tile=tile,
+                             candidates=candidates, cache=False)
+
+
+def _check_shards(backend, shards) -> None:
+    if shards is not None and backend != "mesh":
+        raise ValueError(
+            f"shards= applies only to backend='mesh', not {backend!r}")
 
 
 def _check_plan_overrides(plan, method, backend, t, b_min, b_max,
@@ -375,6 +512,7 @@ def spgemm(
     cache: bool = True,
     validate: str | None = None,
     engine: str | None = None,
+    shards: int | None = None,
 ) -> CSC:
     """Compute C = A @ B with one of the paper's algorithms, or ``"auto"``.
 
@@ -397,14 +535,30 @@ def spgemm(
     (``"stream"`` for ``expand``, ``"naive"`` otherwise).  Engine choice is
     per *execution*, not baked into the plan, so it never conflicts with
     ``plan=``.
+
+    ``backend="mesh"`` distributes across devices (DESIGN.md §13):
+    ``shards`` sets the mesh size (default: all visible devices) and the
+    plan-memory guard applies per shard.  With ``method="auto"`` the
+    communication-aware cost model decides whether to distribute at all,
+    falling back to the single-device jax tile grid when sharding is
+    predicted to lose.
     """
     if plan is not None:
         _check_plan_overrides(plan, method, backend, t, b_min, b_max,
                               tile, candidates)
         return plan.execute(a, b, validate=validate, engine=engine)
     method, backend = _resolve_method_backend(method, backend)
+    _check_shards(backend, shards)
     _check_auto_only(method, t, b_min, b_max, tile, candidates)
     _check_canonical_only(backend, t, b_min, b_max)
+    if backend == "mesh":
+        if method == "auto":
+            p = _auto_mesh_plan(a, b, shards, tile, candidates, cache)
+        elif cache:
+            p = _cached_mesh_plan(a, b, shards)
+        else:
+            p = plan_spgemm(a, b, method, backend="mesh", shards=shards)
+        return p.execute(a, b, validate=validate, engine=engine)
     if method == "auto":
         if cache:
             p = _cached_tiled_plan(a, b, backend, tile, candidates)
@@ -436,6 +590,7 @@ def spgemm_batched(
     cache: bool = True,
     validate: str | None = None,
     engine: str | None = None,
+    shards: int | None = None,
 ) -> list:
     """B same-pattern multiplies C_b = A_b @ B_b through one plan execution.
 
@@ -465,9 +620,18 @@ def spgemm_batched(
     if a.batch < 1:
         raise ValueError("empty batch")
     method, backend = _resolve_method_backend(method, backend)
+    _check_shards(backend, shards)
     _check_auto_only(method, t, b_min, b_max, tile, candidates)
     _check_canonical_only(backend, t, b_min, b_max)
     a0, b0 = a.element(0), b.element(0)
+    if backend == "mesh":
+        if method == "auto":
+            p = _auto_mesh_plan(a0, b0, shards, tile, candidates, cache)
+        elif cache:
+            p = _cached_mesh_plan(a0, b0, shards)
+        else:
+            p = plan_spgemm(a0, b0, method, backend="mesh", shards=shards)
+        return p.execute_batched(a, b, validate=validate, engine=engine)
     if method == "auto":
         if cache:
             p = _cached_tiled_plan(a0, b0, backend, tile, candidates)

@@ -159,7 +159,7 @@ def check_method_knobs(contract: ExecutionContract, t, b_min, b_max) -> None:
 
 
 # ---------------------------------------------------------------------------
-# the three built-in contracts (DESIGN.md §10 capability matrix)
+# the built-in contracts (DESIGN.md §10 capability matrix)
 # ---------------------------------------------------------------------------
 
 HOST = register_backend(ExecutionContract(
@@ -205,4 +205,22 @@ JAX = register_backend(ExecutionContract(
     device_resident=True,
     carries_stream=True,
     canonical_method="expand",   # the stream computes expand's contraction
+))
+
+MESH = register_backend(ExecutionContract(
+    name="mesh",
+    # one engine: every device replays its slice of the sharded stream
+    # inside a single shard_map, partials reduced by a plan-static
+    # psum_scatter over destination bins (DESIGN.md §13).  The per-device
+    # replay *is* the jax stream, so the contract mirrors jax — including
+    # canonical-method collapse and the bilinear custom_vjp — but the
+    # plan-memory guard applies per shard, not to the whole stream.
+    engines=(None, "stream"),
+    default_engine="stream",
+    supports_batched=True,
+    supports_grad=True,
+    bit_exact_oracle=False,
+    device_resident=True,
+    carries_stream=True,
+    canonical_method="expand",
 ))

@@ -59,6 +59,10 @@ AUTO_CANDIDATES = {
     "host": ("spa", "expand", "jax", "fused"),
     "pallas": ("spa", "spars-40/40", "hash-256/256"),
     "jax": ("jax", "fused"),
+    # mesh children are device-stream replays; the distribute-or-not
+    # decision itself is estimate_mesh_cost/should_distribute, not a
+    # per-tile method race
+    "mesh": ("jax",),
 }
 
 
@@ -102,6 +106,16 @@ class CostConstants:
     # becomes the cheapest in-guard family.
     fused_base: float = 7.9e-5
     fused_prod: float = 3.0e-7
+    # mesh backend communication terms (DESIGN.md §13): fixed collective
+    # dispatch/launch overhead per sharded execution, plus a per-byte toll
+    # on the cross-device partial-C reduction — a tiled psum_scatter moves
+    # ~(D-1)/D of the padded slot axis through the interconnect.  The
+    # defaults are honest CI-container numbers (host mesh of XLA CPU
+    # devices: the "interconnect" is memcpy), deliberately conservative so
+    # auto only distributes when the stream guard forces it or the matrix
+    # is far past single-device scale.
+    comm_base: float = 1.0e-3
+    comm_byte: float = 5.0e-10
     # host esc_numpy: expand + explicit LSD radix rounds
     esc_base: float = 2.0e-4
     esc_round: float = 1.2e-7         # per product per radix round
@@ -250,6 +264,58 @@ def estimate_cost(stats: TileStats, method: str, backend: str = "host",
     if contract.cost_domain == "relative":
         return _pallas_cost(stats, method, c)
     return _host_cost(stats, method, c)
+
+
+def estimate_mesh_cost(stats: TileStats, n_shards: int,
+                       constants: CostConstants | None = None) -> float:
+    """Predicted wall seconds of a mesh-distributed execution (DESIGN.md §13).
+
+    Compute: the jax device-stream cost of one shard's ~1/D slice of the
+    product stream (the guard applies per shard, so the slice never pays
+    the transient-rebuild penalty as long as it fits — callers sizing
+    shards so it does is the whole point of distributing).  Communication:
+    a fixed collective overhead plus the per-byte toll of the tiled
+    ``psum_scatter`` partial-C reduction, which moves ``(D-1)/D`` of the
+    f32 slot axis (|C| estimated from the flops upper bound) through the
+    interconnect.  Seconds domain — directly comparable with the host/jax
+    estimates of :func:`estimate_cost`.
+    """
+    c = constants or DEFAULT_CONSTANTS
+    d = max(int(n_shards), 1)
+    flops = stats.flops
+    per_shard = -(-flops // d)
+    if per_shard <= _fast.STREAM_MAX_PRODUCTS:
+        compute = c.jax_base + c.jax_prod * per_shard
+    else:
+        compute = _guarded_rebuild_cost(per_shard, c)
+    if d == 1:
+        return compute
+    nnz_c = min(flops, stats.m * stats.n)
+    comm = c.comm_base + c.comm_byte * 4.0 * nnz_c * (d - 1) / d
+    return compute + comm
+
+
+def should_distribute(stats: TileStats, n_shards: int,
+                      constants: CostConstants | None = None,
+                      shard_limit: int | None = None) -> bool:
+    """Whether ``method="auto"`` on the mesh backend should shard.
+
+    True when distributing is predicted to win: either the whole product
+    stream is above the single-device plan-memory guard (a single-device
+    execution would pay the per-call transient rebuild; sharding lifts the
+    guard to ``n_shards x shard_limit``), or the communication-aware mesh
+    estimate undercuts the best single-device stream estimate outright.
+    With one shard (or one device) the answer is always False.
+    """
+    if int(n_shards) <= 1:
+        return False
+    c = constants or DEFAULT_CONSTANTS
+    limit = (_fast.STREAM_MAX_PRODUCTS if shard_limit is None
+             else int(shard_limit))
+    if stats.flops > limit:
+        return True
+    single = c.jax_base + c.jax_prod * stats.flops
+    return estimate_mesh_cost(stats, n_shards, c) < single
 
 
 def choose_method(stats: TileStats, backend: str = "host",

@@ -62,7 +62,7 @@ def warm_plan(plan) -> None:
     stream = getattr(plan, "stream", None)
     if stream is None:
         return
-    if getattr(plan, "backend", None) == "jax":
+    if getattr(plan, "backend", None) in ("jax", "mesh"):
         a_nnz = int(plan.a.col_ptr[-1])
         b_nnz = int(plan.b.col_ptr[-1])
         out = plan.stream_apply(np.zeros(a_nnz, np.float32),
@@ -101,7 +101,9 @@ class PlanBuilder:
         self._stopped = False
         self.max_pending = max_pending
         self.stats = {"submitted": 0, "completed": 0, "failed": 0,
-                      "deduped": 0, "shed": 0, "cached": 0}
+                      "deduped": 0, "shed": 0, "cached": 0, "rewarmed": 0}
+        self._known: dict = {}          # plan key -> submit() kwargs
+        self._rewarm_cb = None
         self._threads = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"plan-builder-{i}")
@@ -130,6 +132,13 @@ class PlanBuilder:
         key = api.plan_cache_key(a, b, method, backend=backend, t=t,
                                  b_min=b_min, b_max=b_max,
                                  stream_limit=stream_limit)
+        with self._lock:
+            # remember how to rebuild this key so a post-shrink re-warm
+            # (rewarm / enable_rewarm) can resubmit it without the caller
+            self._known[key] = dict(a=a, b=b, method=method,
+                                    backend=backend, t=t, b_min=b_min,
+                                    b_max=b_max, stream_limit=stream_limit,
+                                    warm=warm)
         if api.plan_cache_peek(key) is not None:
             self.stats["cached"] += 1
             return "cached"
@@ -202,6 +211,57 @@ class PlanBuilder:
                              stream_limit=stream_limit)
         return fb, "fallback"
 
+    # -- post-shrink re-warm (DESIGN.md §12) ---------------------------------
+
+    def rewarm(self, keys) -> int:
+        """Resubmit builds for evicted plan keys this builder has seen.
+
+        ``plan_cache_resize()`` shrinking below the number of in-flight
+        builds silently evicts completed builds (the ``wasted_builds``
+        counter in ``plan_cache_info()``); this re-queues the known ones so
+        the cache re-converges in the background.  Keys this builder never
+        built are skipped.  Returns the number of builds resubmitted.
+        """
+        count = 0
+        for key in keys:
+            with self._lock:
+                spec = self._known.get(key)
+            if spec is None:
+                continue
+            spec = dict(spec)
+            a, b, method = spec.pop("a"), spec.pop("b"), spec.pop("method")
+            try:
+                if self.submit(a, b, method, tag=("rewarm", key),
+                               **spec) == "submitted":
+                    count += 1
+                    self.stats["rewarmed"] += 1
+            except RuntimeError:
+                break   # shut down mid-notification; nothing to re-queue
+        return count
+
+    def enable_rewarm(self) -> None:
+        """Hook :meth:`rewarm` to the plan cache's post-shrink evictions.
+
+        Registers an ``api.register_eviction_listener`` callback that
+        resubmits this builder's evicted keys after every
+        ``plan_cache_resize()`` shrink (capacity-pressure evictions never
+        notify, so re-warming cannot fight the LRU).  Idempotent;
+        unhooked automatically by :meth:`shutdown`.
+        """
+        if self._rewarm_cb is None:
+            def cb(keys, reason):
+                if reason == "resize":
+                    self.rewarm(keys)
+
+            self._rewarm_cb = cb
+            api.register_eviction_listener(cb)
+
+    def disable_rewarm(self) -> None:
+        """Unhook the :meth:`enable_rewarm` listener (idempotent)."""
+        if self._rewarm_cb is not None:
+            api.unregister_eviction_listener(self._rewarm_cb)
+            self._rewarm_cb = None
+
     # -- completion / lifecycle ----------------------------------------------
 
     def poll(self) -> list:
@@ -224,6 +284,7 @@ class PlanBuilder:
 
     def shutdown(self, wait: bool = True) -> None:
         """Stop accepting work; optionally drain the queue and join."""
+        self.disable_rewarm()
         with self._lock:
             if self._stopped:
                 return

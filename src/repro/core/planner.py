@@ -449,6 +449,7 @@ def plan_spgemm(
     block_cols: int = 128,
     tile_cols: int | None = None,
     stream_limit: int | None = None,
+    shards: int | None = None,
 ) -> SpgemmPlan:
     """Build the symbolic plan for C = A @ B (pattern-dependent work only).
 
@@ -464,7 +465,17 @@ def plan_spgemm(
     ``fast.STREAM_MAX_PRODUCTS`` at plan time); above it ``plan.stream`` is
     ``None`` and stream executions rebuild it transiently — same results,
     no plan-resident O(flops) memory.
+
+    ``backend="mesh"`` delegates to
+    :func:`repro.distributed.spgemm_mesh.plan_spgemm_mesh` and returns a
+    :class:`~repro.distributed.spgemm_mesh.ShardedSpgemmPlan` — the tile
+    grid placed across ``shards`` devices (default: all visible), with
+    ``stream_limit`` acting as the *per-shard* plan-memory guard.
+    ``shards`` is mesh-only; any other backend rejects it.
     """
+    if shards is not None and backend != "mesh":
+        raise ValueError(
+            f"shards= applies only to backend='mesh', not {backend!r}")
     if a.n_cols != b.n_rows:
         raise ValueError(f"shape mismatch {a.shape} @ {b.shape}")
     if method not in ALGORITHMS and not method.startswith(
@@ -483,6 +494,11 @@ def plan_spgemm(
         # contraction, so every method *spelling* shares one canonical
         # plan (plan.method reports the canonical form)
         method = contract.canonical_method
+    if backend == "mesh":
+        from repro.distributed.spgemm_mesh import plan_spgemm_mesh
+
+        return plan_spgemm_mesh(a, b, shards=shards,
+                                shard_limit=stream_limit)
     params = resolve_params(method, t=t, b_min=b_min, b_max=b_max)
     a_pat, b_pat = Pattern.of(a), Pattern.of(b)
 

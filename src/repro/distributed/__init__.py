@@ -1,4 +1,4 @@
-"""Distribution layer: sharding rules, compression, pipeline."""
+"""Distribution layer: sharding rules, compression, pipeline, mesh SpGEMM."""
 
 from repro.distributed.sharding import (
     batch_spec, cache_specs, dp_axes, mesh_axis_sizes, param_sharding,
@@ -8,10 +8,14 @@ from repro.distributed.compression import (
     dequantize_tree, ef_compress, psum_compressed, quantize_tree,
 )
 from repro.distributed.pipeline import pipelined_apply, pipeline_forward
+from repro.distributed.spgemm_mesh import (
+    ShardedSpgemmPlan, ShardStream, plan_spgemm_mesh,
+)
 
 __all__ = [
     "batch_spec", "cache_specs", "dp_axes", "mesh_axis_sizes",
     "param_sharding", "sharding_rules", "dequantize_tree", "ef_compress",
     "psum_compressed", "quantize_tree", "pipelined_apply",
-    "pipeline_forward",
+    "pipeline_forward", "ShardedSpgemmPlan", "ShardStream",
+    "plan_spgemm_mesh",
 ]

@@ -1,0 +1,350 @@
+"""Mesh-distributed SpGEMM (DESIGN.md §13): sharded plans, destination
+binning, the deterministic cross-device merge contract, gradients, and the
+cost-model distribute decision.
+
+In-process tests run on the conftest-pinned single CPU device (a 1-shard
+mesh exercises the full plan/stream/shard_map/psum_scatter machinery); the
+multi-device path runs in a subprocess under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import bit_identical as _bit_identical
+from repro.core import api, cached_plan, plan_cache_clear, spgemm
+from repro.core.cost import estimate_mesh_cost, should_distribute
+from repro.core.executor import execute, execute_batched
+from repro.core.planner import plan_spgemm
+from repro.distributed import ShardedSpgemmPlan, plan_spgemm_mesh
+from repro.distributed.spgemm_mesh import _ops_balanced_bounds
+from repro.sparse import random_density_csc, random_uniform_csc
+from repro.sparse.format import CSC
+from repro.sparse.stats import ops_per_column, tile_stats
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    plan_cache_clear()
+    yield
+    plan_cache_clear()
+
+
+def _int_csc(n, z, seed, n_rows):
+    """Integer-valued f32 operand: device sums are exact, so the mesh
+    result must match the f64 host oracle bit for bit."""
+    m = random_uniform_csc(n, z, seed=seed, n_rows=n_rows)
+    rng = np.random.default_rng(seed + 100)
+    return CSC(rng.integers(1, 8, m.nnz).astype(np.float32),
+               m.row_indices, m.col_ptr, m.shape)
+
+
+def _host_oracle(a, b):
+    plan = plan_spgemm(a, b, "expand", backend="host", stream_limit=10**12)
+    return execute(plan, a, b, engine="stream")
+
+
+def _as_host(c):
+    return CSC(np.asarray(c.values), np.asarray(c.row_indices),
+               np.asarray(c.col_ptr), c.shape)
+
+
+# --- planning --------------------------------------------------------------
+
+
+def test_ops_balanced_bounds_properties():
+    ops = np.array([100, 1, 1, 1, 100, 1, 1, 1, 100, 1])
+    bounds = _ops_balanced_bounds(ops, 3)
+    assert bounds[0] == 0 and bounds[-1] == len(ops)
+    assert np.all(np.diff(bounds) >= 1)
+    # flop-balanced: no block should carry everything
+    blk = np.add.reduceat(ops, bounds[:-1])
+    assert blk.max() < ops.sum()
+    assert len(_ops_balanced_bounds(np.zeros(0, np.int64), 4)) == 1
+    assert list(_ops_balanced_bounds(np.array([5]), 4)) == [0, 1]
+
+
+def test_mesh_plan_structure_and_guard():
+    a = _int_csc(60, 6, seed=0, n_rows=50)
+    b = _int_csc(40, 5, seed=1, n_rows=60)
+    total = int(ops_per_column(a, b).sum())
+    plan = plan_spgemm_mesh(a, b, shards=1, shard_limit=2 * total)
+    assert isinstance(plan, ShardedSpgemmPlan)
+    assert plan.backend == "mesh" and plan.method == "expand"
+    assert plan.shape == (50, 40)
+    assert plan.n_shards == 1
+    # every tile fits the per-shard guard, placement covers all flops
+    assert int(plan.predicted_flops.sum()) == total
+    assert plan.imbalance >= 1.0
+    ss = plan.stream
+    assert ss.n_products == total
+    assert ss.padded_slots % plan.n_shards == 0
+    assert ss.padded_slots > ss.num_slots   # trash slot exists
+    assert int(ss.per_device.sum()) == total
+    assert plan.mesh_stream_nbytes == ss.nbytes > 0
+
+
+def test_mesh_plan_overfull_raises():
+    a = _int_csc(60, 6, seed=0, n_rows=50)
+    b = _int_csc(40, 5, seed=1, n_rows=60)
+    total = int(ops_per_column(a, b).sum())
+    with pytest.raises(ValueError, match="shard_limit"):
+        plan_spgemm_mesh(a, b, shards=1, shard_limit=total // 4)
+
+
+def test_mesh_shards_validation():
+    a = _int_csc(10, 2, seed=0, n_rows=10)
+    with pytest.raises(ValueError, match="shards"):
+        plan_spgemm_mesh(a, a, shards=0)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        plan_spgemm_mesh(a, _int_csc(5, 2, seed=0, n_rows=9))
+    with pytest.raises(ValueError, match="backend='mesh'"):
+        spgemm(a, a, "expand", backend="host", shards=2)
+
+
+# --- execution: bit-identity, grads, jit, batched --------------------------
+
+
+def test_mesh_bit_matches_guard_lifted_host_stream():
+    a = _int_csc(60, 6, seed=0, n_rows=50)
+    b = _int_csc(40, 5, seed=1, n_rows=60)
+    # force a real multi-tile grid (k and n both split) on one shard
+    plan = plan_spgemm_mesh(a, b, shards=1, tile=(20, 8))
+    assert len(plan.tiles) > 4
+    c = plan.execute(a, b)
+    assert _bit_identical(_as_host(c), _host_oracle(a, b))
+
+
+def test_mesh_execution_is_deterministic():
+    a = _int_csc(50, 5, seed=4, n_rows=45)
+    b = _int_csc(35, 4, seed=5, n_rows=50)
+    plan = plan_spgemm_mesh(a, b, shards=1)
+    c1 = _as_host(plan.execute(a, b))
+    c2 = _as_host(plan.execute(a, b))
+    assert _bit_identical(c1, c2)
+
+
+def test_mesh_gradients_match_single_device_stream():
+    a = _int_csc(50, 5, seed=2, n_rows=40)
+    b = _int_csc(30, 4, seed=3, n_rows=50)
+    mesh_plan = plan_spgemm_mesh(a, b, shards=1)
+    jax_plan = plan_spgemm(a, b, "expand", backend="jax")
+    av, bv = jnp.asarray(a.values), jnp.asarray(b.values)
+
+    def loss(apply):
+        return lambda x, y: jnp.sum(apply(x, y) ** 2)
+
+    ga_m, gb_m = jax.grad(loss(mesh_plan.stream_apply), (0, 1))(av, bv)
+    ga_j, gb_j = jax.grad(loss(jax_plan.stream_apply), (0, 1))(av, bv)
+    np.testing.assert_allclose(np.asarray(ga_m), np.asarray(ga_j))
+    np.testing.assert_allclose(np.asarray(gb_m), np.asarray(gb_j))
+
+
+def test_mesh_stream_apply_is_jittable():
+    a = _int_csc(40, 4, seed=6, n_rows=30)
+    b = _int_csc(25, 3, seed=7, n_rows=40)
+    plan = plan_spgemm_mesh(a, b, shards=1)
+    eager = np.asarray(plan.stream_apply(a.values, b.values))
+    jitted = np.asarray(jax.jit(plan.stream_apply)(a.values, b.values))
+    assert np.array_equal(eager, jitted)
+
+
+def test_mesh_batched_matches_loop():
+    a = _int_csc(40, 4, seed=8, n_rows=30)
+    b = _int_csc(25, 3, seed=9, n_rows=40)
+    plan = plan_spgemm_mesh(a, b, shards=1)
+    B = 3
+    av = (np.stack([np.asarray(a.values)] * B)
+          * np.arange(1, B + 1, dtype=np.float32)[:, None])
+    bv = np.stack([np.asarray(b.values)] * B)
+    outs = execute_batched(plan, av, bv)
+    assert len(outs) == B
+    for i in range(B):
+        ci = execute(plan, av[i], bv[i])
+        assert np.array_equal(np.asarray(outs[i].values),
+                              np.asarray(ci.values))
+
+
+def test_mesh_empty_operand():
+    b = _int_csc(20, 3, seed=10, n_rows=30)
+    ea = CSC(np.zeros(0, np.float32), np.zeros(0, np.int32),
+             np.zeros(31, np.int32), (25, 30))
+    plan = plan_spgemm_mesh(ea, b, shards=1)
+    c = plan.execute(ea, b)
+    assert c.shape == (25, 20) and c.nnz == 0
+    # gradient of the empty contraction is zero, not an error
+    g = jax.grad(lambda y: jnp.sum(plan.stream_apply(ea.values, y)))(
+        jnp.asarray(b.values))
+    assert np.array_equal(np.asarray(g), np.zeros(b.nnz, np.float32))
+
+
+def test_mesh_oversized_value_arrays():
+    # serving overlays pad value arrays past nnz; the vjp must hand back
+    # cotangents in the oversized shape with zero tail
+    a = _int_csc(30, 3, seed=11, n_rows=25)
+    b = _int_csc(20, 3, seed=12, n_rows=30)
+    plan = plan_spgemm_mesh(a, b, shards=1)
+    pad = 7
+    av = jnp.concatenate([jnp.asarray(a.values),
+                          jnp.full(pad, 99.0, jnp.float32)])
+    bv = jnp.asarray(b.values)
+    ref = np.asarray(plan.stream_apply(a.values, b.values))
+    assert np.array_equal(np.asarray(plan.stream_apply(av, bv)), ref)
+    ga = jax.grad(lambda x, y: jnp.sum(plan.stream_apply(x, y)), 0)(av, bv)
+    assert ga.shape == av.shape
+    assert np.array_equal(np.asarray(ga[a.nnz:]), np.zeros(pad, np.float32))
+
+
+# --- api threading: cache, auto, executor contract -------------------------
+
+
+def test_spgemm_mesh_through_api_and_cache():
+    a = _int_csc(50, 5, seed=2, n_rows=40)
+    b = _int_csc(30, 4, seed=3, n_rows=50)
+    c = spgemm(a, b, "expand", backend="mesh", shards=1)
+    assert _bit_identical(_as_host(c), _host_oracle(a, b))
+    key = api.plan_cache_key(a, b, "expand", backend="mesh", shards=1)
+    plan = api.plan_cache_peek(key)
+    assert plan is not None and plan.backend == "mesh"
+    assert cached_plan(a, b, "expand", backend="mesh", shards=1) is plan
+    # method spellings collapse to the canonical stream contraction
+    assert cached_plan(a, b, "spa", backend="mesh", shards=1) is plan
+    info = api.plan_cache_info()
+    assert info["mesh_stream_bytes"] >= plan.mesh_stream_nbytes > 0
+
+
+def test_mesh_plans_key_on_shard_count():
+    a = _int_csc(30, 3, seed=13, n_rows=25)
+    b = _int_csc(20, 3, seed=14, n_rows=30)
+    k1 = api.plan_cache_key(a, b, "expand", backend="mesh", shards=1)
+    k2 = api.plan_cache_key(a, b, "expand", backend="mesh", shards=4)
+    assert k1 != k2
+
+
+def test_auto_mesh_small_matrix_stays_single_device():
+    a = _int_csc(30, 3, seed=15, n_rows=25)
+    b = _int_csc(20, 3, seed=16, n_rows=30)
+    assert not should_distribute(tile_stats(a, b), 8)
+    c = spgemm(a, b, "auto", backend="mesh", shards=1)
+    ref = spgemm(a, b, "auto", backend="jax")
+    np.testing.assert_allclose(np.asarray(c.values), np.asarray(ref.values))
+
+
+def test_should_distribute_above_guard():
+    a = random_density_csc(64, 64, 0.3, seed=17)
+    b = random_density_csc(64, 64, 0.3, seed=18)
+    st = tile_stats(a, b)
+    # a stream above the (per-shard) guard must distribute on any D > 1
+    assert should_distribute(st, 8, shard_limit=st.flops // 2)
+    assert not should_distribute(st, 1, shard_limit=st.flops // 2)
+    # far below the guard, communication overhead wins on CI constants
+    assert not should_distribute(st, 8)
+
+
+def test_estimate_mesh_cost_comm_terms():
+    from repro.sparse.stats import TileStats
+
+    small = tile_stats(random_density_csc(64, 64, 0.4, seed=19),
+                       random_density_csc(64, 64, 0.4, seed=20))
+    # in-guard: sharding splits compute but pays collective overhead, so
+    # small multiplies must predict slower distributed
+    assert estimate_mesh_cost(small, 2) > estimate_mesh_cost(small, 1)
+    # far above the guard: the single-device estimate pays the per-call
+    # transient rebuild, the sharded one does not — distribution wins
+    import repro.core.fast as fast
+
+    big_flops = 4 * fast.STREAM_MAX_PRODUCTS
+    big = TileStats(m=10**5, k=10**5, n=10**5, nnz_a=10**6, nnz_b=10**6,
+                    ops=np.array([big_flops], np.int64),
+                    steps=np.array([1], np.int64))
+    assert should_distribute(big, 8)
+    assert estimate_mesh_cost(big, 8) < estimate_mesh_cost(big, 1)
+
+
+def test_mesh_needs_enough_devices_at_execute():
+    a = _int_csc(30, 3, seed=21, n_rows=25)
+    b = _int_csc(20, 3, seed=22, n_rows=30)
+    plan = plan_spgemm_mesh(a, b, shards=len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        plan.execute(a, b)
+
+
+# --- the multi-device path (subprocess: conftest pins one device) ----------
+
+
+_MULTI_DEVICE_SCRIPT = textwrap.dedent("""
+    import json
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.core.planner import plan_spgemm
+    from repro.core.executor import execute
+    from repro.distributed import plan_spgemm_mesh
+    from repro.sparse import random_uniform_csc
+    from repro.sparse.format import CSC, csc_bit_identical
+
+    assert len(jax.devices()) == 8, jax.devices()
+    rng = np.random.default_rng(0)
+    a = random_uniform_csc(160, 8, seed=0, n_rows=120)
+    b = random_uniform_csc(120, 7, seed=1, n_rows=160)
+    a = CSC(rng.integers(1, 8, a.nnz).astype(np.float32),
+            a.row_indices, a.col_ptr, a.shape)
+    b = CSC(rng.integers(1, 8, b.nnz).astype(np.float32),
+            b.row_indices, b.col_ptr, b.shape)
+
+    # per-shard guard far below the total stream: only a mesh plan fits
+    total = int(sum(np.diff(a.col_ptr)[b.row_indices]))
+    limit = total // 4
+    plan = plan_spgemm_mesh(a, b, shards=8, shard_limit=limit)
+    ss = plan.stream
+    assert ss.n_products == total
+    assert int(ss.per_device.max()) <= limit
+    c = plan.execute(a, b)
+    ref = execute(plan_spgemm(a, b, "expand", backend="host",
+                              stream_limit=10**12), a, b, engine="stream")
+    ok = csc_bit_identical(
+        CSC(np.asarray(c.values), np.asarray(c.row_indices),
+            np.asarray(c.col_ptr), c.shape), ref)
+
+    # grads across the 8-device psum_scatter reduction
+    jp = plan_spgemm(a, b, "expand", backend="jax", stream_limit=10**12)
+    f_m = lambda x, y: jnp.sum(plan.stream_apply(x, y) ** 2)
+    f_j = lambda x, y: jnp.sum(jp.stream_apply(x, y) ** 2)
+    ga_m, gb_m = jax.grad(f_m, (0, 1))(jnp.asarray(a.values),
+                                       jnp.asarray(b.values))
+    ga_j, gb_j = jax.grad(f_j, (0, 1))(jnp.asarray(a.values),
+                                       jnp.asarray(b.values))
+    grads_ok = (np.allclose(np.asarray(ga_m), np.asarray(ga_j))
+                and np.allclose(np.asarray(gb_m), np.asarray(gb_j)))
+    print(json.dumps({
+        "bit_identical": bool(ok), "grads_ok": bool(grads_ok),
+        "imbalance": plan.imbalance,
+        "per_device": ss.per_device.tolist(),
+        "devices": len(jax.devices())}))
+""")
+
+
+def test_eight_device_mesh_subprocess():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-4000:]
+    report = json.loads(out.stdout.strip().splitlines()[-1])
+    assert report["devices"] == 8
+    assert report["bit_identical"], report
+    assert report["grads_ok"], report
+    assert report["imbalance"] < 2.0, report

@@ -187,3 +187,66 @@ def test_auto_tile_grid_scales_with_nnz():
     k_blocks, n_blocks = auto_tile_grid(big, big)
     assert n_blocks > 1          # past the n-axis nnz target
     assert k_blocks >= 1
+
+
+# --- deterministic reduction order (the distributed-merge contract) --------
+
+
+def _rand_part(seed, shape):
+    return random_density_csc(shape[0], shape[1], 0.25, seed=seed)
+
+
+def test_merge_bit_identical_regardless_of_completion_order():
+    """The mesh contract (DESIGN.md §9/§13): partials are merged in plan
+    (k) order — list position — so the merged bits must not depend on the
+    order the parts were *computed* in (device completion order)."""
+    import threading
+
+    shape = (30, 20)
+    seeds = [1, 2, 3, 4, 5]
+    ref = merge_csc_partials([_rand_part(s, shape) for s in seeds], shape)
+    # parts computed in arbitrary sequential order, merged in k order
+    for perm_seed in range(4):
+        order = np.random.default_rng(perm_seed).permutation(len(seeds))
+        computed = {}
+        for i in order:
+            computed[int(i)] = _rand_part(seeds[int(i)], shape)
+        merged = merge_csc_partials(
+            [computed[i] for i in range(len(seeds))], shape)
+        assert _bit_identical(merged, ref)
+    # parts computed concurrently (racing "devices"), merged in k order
+    slots = [None] * len(seeds)
+
+    def build(i):
+        slots[i] = _rand_part(seeds[i], shape)
+
+    threads = [threading.Thread(target=build, args=(i,))
+               for i in range(len(seeds))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert _bit_identical(merge_csc_partials(slots, shape), ref)
+
+
+def test_merge_k_order_is_the_fp_reassociation_boundary():
+    """List position IS the reduction order: reordering the partial list
+    reassociates the float sum and may change bits (which is exactly why
+    the mesh plan presents partials mesh-ordered, never completion-
+    ordered).  1e20 + (-1e20) + 1 makes the boundary deterministic."""
+    shape = (2, 2)
+
+    def part(v):
+        return CSC(np.array([v]), np.array([0], np.int32),
+                   np.array([0, 1, 1], np.int32), shape)
+
+    in_order = merge_csc_partials(
+        [part(1e20), part(-1e20), part(1.0)], shape)
+    reassociated = merge_csc_partials(
+        [part(1e20), part(1.0), part(-1e20)], shape)
+    assert in_order.values[0] == 1.0
+    assert reassociated.values[0] == 0.0
+    # same list twice -> same bits: the order sensitivity is *only* in the
+    # list order, never in run-to-run nondeterminism
+    again = merge_csc_partials([part(1e20), part(-1e20), part(1.0)], shape)
+    assert _bit_identical(in_order, again)

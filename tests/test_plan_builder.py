@@ -265,3 +265,81 @@ def test_allmiss_churn_bit_identical_to_cold_cache():
     finally:
         api.plan_cache_resize(orig)
     assert plan_cache_info()["evictions"] > 0  # churn actually happened
+
+
+# ---------------------------------------------------------------------------
+# post-shrink waste accounting + re-warm (the resize-under-builds fix)
+# ---------------------------------------------------------------------------
+
+
+def test_wasted_builds_counts_insert_then_evict():
+    """A build completing into a cache too small to keep it (the resize-
+    below-in-flight-builds race) must be surfaced, not silent."""
+    a, b = _mats(1)[0]
+    orig = plan_cache_info()["max_size"]
+    gate = threading.Event()
+    try:
+        with PlanBuilder() as builder:
+            builder.submit_task(gate.wait, tag="gate")
+            # queued behind the gate: the shrink lands mid-"flight"
+            assert builder.submit(a, b, "expand", backend="host",
+                                  warm=False) == "submitted"
+            api.plan_cache_resize(0)
+            gate.set()
+            assert builder.wait_idle(60)
+        info = plan_cache_info()
+        assert info["size"] == 0
+        assert info["wasted_builds"] == 1, info
+        # a hit-then-evicted entry is NOT waste
+        api.plan_cache_resize(2)
+        plan = cached_plan(a, b, "expand", backend="host")   # miss, insert
+        assert cached_plan(a, b, "expand", backend="host") is plan  # hit
+        api.plan_cache_resize(0)
+        assert plan_cache_info()["wasted_builds"] == 1
+    finally:
+        api.plan_cache_resize(orig)
+
+
+def test_rewarm_hook_rebuilds_after_shrink():
+    mats = _mats(2)
+    orig = plan_cache_info()["max_size"]
+    try:
+        api.plan_cache_resize(4)
+        with PlanBuilder() as builder:
+            builder.enable_rewarm()
+            builder.enable_rewarm()   # idempotent
+            for a, b in mats:
+                builder.submit(a, b, "expand", backend="host", warm=False)
+            assert builder.wait_idle(60)
+            keys = [plan_cache_key(a, b, "expand", backend="host")
+                    for a, b in mats]
+            assert all(plan_cache_peek(k) is not None for k in keys)
+            # shrink evicts the LRU entry; the listener resubmits it
+            api.plan_cache_resize(1)
+            assert builder.wait_idle(60)
+            assert builder.stats["rewarmed"] == 1, builder.stats
+            # the re-warmed build landed back in the (now size-1) cache,
+            # evicting the survivor through ordinary capacity pressure —
+            # which must NOT re-notify (no listener ping-pong)
+            rewarmed = builder.stats["rewarmed"]
+            assert sum(plan_cache_peek(k) is not None for k in keys) == 1
+            assert builder.stats["rewarmed"] == rewarmed
+        # shutdown unhooked the listener
+        assert api._EVICTION_LISTENERS == []
+        api.plan_cache_resize(0)   # no listener left to fire
+    finally:
+        api.plan_cache_resize(orig)
+
+
+def test_rewarm_skips_unknown_keys():
+    a, b = _mats(1)[0]
+    with PlanBuilder() as builder:
+        key = plan_cache_key(a, b, "expand", backend="host")
+        assert builder.rewarm([key, ("bogus",)]) == 0   # never submitted
+        builder.submit(a, b, "expand", backend="host", warm=False)
+        assert builder.wait_idle(60)
+        api.plan_cache_resize(0)
+        api.plan_cache_resize(64)
+        assert builder.rewarm([key]) == 1
+        assert builder.wait_idle(60)
+        assert plan_cache_peek(key) is not None

@@ -196,3 +196,39 @@ def test_dense_engine_unaffected_by_builder(small_model):
         done = eng.run_to_completion()
     assert eng.tick_stats["fallback_ticks"] == 0
     assert len(done[rid].generated) == 3
+
+
+def test_sampled_decode_equivalent_across_promotion(sparse_model):
+    """Sampled (temperature>0) serving across the fallback->jit promotion
+    boundary: same engine seed => same token sequence whether ticks ran
+    eager-fallback, jitted, or a mix.  Requires both paths to produce the
+    same sampling distributions *and* to consume PRNG entropy identically
+    per tick — a promotion mid-request must not shift the stream."""
+    cfg, sparse_params, overlay = sparse_model
+    gate = threading.Event()
+    with PlanBuilder() as builder:
+        builder.submit_task(gate.wait, tag="gate")  # warm cannot start
+        eng = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                          sparse_ffn=overlay, plan_builder=builder,
+                          seed=123)
+        rid = eng.submit([1, 2, 3], max_new_tokens=8, temperature=0.7)
+        for _ in range(4):
+            assert eng.step()   # sampled ticks on the fallback path
+        assert eng.tick_stats["fallback_ticks"] == 4
+        gate.set()
+        assert eng.wait_sparse(120)
+        done = eng.run_to_completion()
+        assert eng.tick_stats["jit_ticks"] > 0  # promotion happened
+    mixed_gen = done[rid].generated
+
+    # jit-only reference: same PRNG seed, warm path from the start
+    ref = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                      sparse_ffn=overlay, seed=123)
+    rid2 = ref.submit([1, 2, 3], max_new_tokens=8, temperature=0.7)
+    assert ref.run_to_completion()[rid2].generated == mixed_gen
+
+    # a different seed draws a different sequence (the test has teeth)
+    other = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                        sparse_ffn=overlay, seed=124)
+    rid3 = other.submit([1, 2, 3], max_new_tokens=8, temperature=0.7)
+    assert other.run_to_completion()[rid3].generated != mixed_gen
