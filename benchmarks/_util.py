@@ -34,14 +34,22 @@ def env_info() -> dict:
     """
     import jax
 
+    from repro.core import faults
+
     devices = jax.devices()
-    return {
+    out = {
         "device_count": len(devices),
         "platform": devices[0].platform if devices else "none",
         "devices": [str(d) for d in devices],
         "mesh_shape": {"shards": len(devices)},
         "jax_version": jax.__version__,
     }
+    fp = faults.active()
+    if fp is not None:
+        # a result measured under injected faults must never be mistaken
+        # for a clean baseline (DESIGN.md §14)
+        out["fault_plan"] = fp.describe()
+    return out
 
 
 def write_report(path: str, report: dict) -> None:

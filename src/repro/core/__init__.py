@@ -57,6 +57,7 @@ from repro.core.executor import execute_tiled, execute_tiled_batched
 from repro.core.executor import resolve_engine
 from repro.core.api import (
     ALGORITHMS,
+    PlanBuildTimeout,
     cached_plan,
     plan_cache_clear,
     plan_cache_info,
@@ -68,7 +69,16 @@ from repro.core.api import (
     spgemm_batched,
     unregister_eviction_listener,
 )
-from repro.core.plan_builder import BuildResult, PlanBuilder, warm_plan
+from repro.core.faults import FaultPlan, FaultRule, InjectedFault
+from repro.core.plan_builder import (
+    BuildCancelled,
+    BuildResult,
+    BuildShed,
+    BuildTimeoutError,
+    PlanBuilder,
+    RetryPolicy,
+    warm_plan,
+)
 
 __all__ = [
     "VL_MAX",
@@ -121,8 +131,16 @@ __all__ = [
     "plan_cache_resize",
     "register_eviction_listener",
     "unregister_eviction_listener",
+    "PlanBuildTimeout",
+    "FaultPlan",
+    "FaultRule",
+    "InjectedFault",
+    "BuildCancelled",
     "BuildResult",
+    "BuildShed",
+    "BuildTimeoutError",
     "PlanBuilder",
+    "RetryPolicy",
     "warm_plan",
     "spgemm",
     "spgemm_batched",

@@ -26,6 +26,8 @@ raises instead of being silently ignored.
 from __future__ import annotations
 
 import threading
+import time
+import weakref
 from collections import OrderedDict
 
 from repro.core import backends
@@ -49,7 +51,20 @@ DEFAULT_METHOD = "h-hash-256/256"
 # resize at runtime with plan_cache_resize()
 PLAN_CACHE_SIZE = 64
 _PLAN_CACHE: "OrderedDict[tuple, object]" = OrderedDict()
-_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0, "wasted_builds": 0}
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0, "wasted_builds": 0,
+                "listener_errors": 0, "wait_timeouts": 0}
+
+# Default bound (seconds) on how long a synchronous caller may wait on
+# ANOTHER thread's in-flight build of the same key before _build_once
+# raises PlanBuildTimeout (DESIGN.md §14).  None = wait forever (the
+# pre-resilience behavior); cached_plan(build_timeout=...) overrides
+# per call.  Owners are never interrupted — only waiters time out.
+DEFAULT_BUILD_TIMEOUT: float | None = None
+
+
+class PlanBuildTimeout(TimeoutError):
+    """A single-flight waiter outlived its deadline on another thread's
+    in-flight build (the build itself may still complete later)."""
 
 # keys inserted but never since hit: evicting one of these means the build
 # was pure waste (typically plan_cache_resize() shrinking below the number
@@ -62,6 +77,23 @@ _NEVER_HIT: set = set()
 # Capacity-pressure evictions do not notify — re-warming those would fight
 # the LRU.  Registered by PlanBuilder.enable_rewarm().
 _EVICTION_LISTENERS: list = []
+
+# Weak references to live PlanBuilders: plan_cache_info() surfaces their
+# queue-depth / retry / recycle counters next to the cache telemetry, so
+# one probe reads the whole pipeline's health (DESIGN.md §14).
+_BUILDERS: "list[weakref.ref]" = []
+
+
+def _register_builder(builder) -> None:
+    with _CACHE_LOCK:
+        _BUILDERS[:] = [r for r in _BUILDERS if r() is not None]
+        _BUILDERS.append(weakref.ref(builder))
+
+
+def _unregister_builder(builder) -> None:
+    with _CACHE_LOCK:
+        _BUILDERS[:] = [r for r in _BUILDERS
+                        if r() is not None and r() is not builder]
 
 # The LRU locking contract (DESIGN.md §12): every read or write of
 # _PLAN_CACHE/_CACHE_STATS holds _CACHE_LOCK — required since the
@@ -129,6 +161,14 @@ def plan_cache_info() -> dict:
     entries that were never hit after insertion — a build whose result the
     cache could not keep, the signature of :func:`plan_cache_resize`
     shrinking below the number of in-flight ``PlanBuilder`` builds.
+
+    Resilience telemetry (DESIGN.md §14): ``wait_timeouts`` counts
+    single-flight waiters that hit their ``build_timeout`` deadline,
+    ``listener_errors`` counts eviction-listener exceptions swallowed by
+    :func:`plan_cache_resize`, and ``builders`` lists each live
+    ``PlanBuilder``'s :meth:`~repro.core.plan_builder.PlanBuilder.info`
+    (queue depth, retries, timeouts, recycled workers, backpressure
+    policy).
     """
     with _CACHE_LOCK:
         lookups = _CACHE_STATS["hits"] + _CACHE_STATS["misses"]
@@ -142,15 +182,24 @@ def plan_cache_info() -> dict:
                 host_seen[id(sp)] = getattr(sp, "stream_nbytes", 0)
                 dev_seen[id(sp)] = getattr(sp, "device_stream_nbytes", 0)
                 fused_seen[id(sp)] = getattr(sp, "fused_stream_nbytes", 0)
-        return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
-                    max_size=PLAN_CACHE_SIZE,
-                    hit_rate=(_CACHE_STATS["hits"] / lookups
-                              if lookups else 0.0),
-                    in_flight=len(_BUILDING),
-                    stream_bytes=sum(host_seen.values()),
-                    device_stream_bytes=sum(dev_seen.values()),
-                    fused_stream_bytes=sum(fused_seen.values()),
-                    mesh_stream_bytes=sum(mesh_seen.values()))
+        out = dict(_CACHE_STATS, size=len(_PLAN_CACHE),
+                   max_size=PLAN_CACHE_SIZE,
+                   hit_rate=(_CACHE_STATS["hits"] / lookups
+                             if lookups else 0.0),
+                   in_flight=len(_BUILDING),
+                   stream_bytes=sum(host_seen.values()),
+                   device_stream_bytes=sum(dev_seen.values()),
+                   fused_stream_bytes=sum(fused_seen.values()),
+                   mesh_stream_bytes=sum(mesh_seen.values()))
+        refs = list(_BUILDERS)
+    # builder.info() takes the builder's own lock — collect outside ours
+    builders = []
+    for r in refs:
+        b = r()
+        if b is not None:
+            builders.append(b.info())
+    out["builders"] = builders
+    return out
 
 
 def plan_cache_resize(n: int) -> dict:
@@ -171,12 +220,15 @@ def plan_cache_resize(n: int) -> dict:
         while len(_PLAN_CACHE) > PLAN_CACHE_SIZE:
             evicted.append(_evict_locked())
     if evicted:
-        # outside the lock: listeners may re-enter the cache (re-warm)
+        # outside the lock: listeners may re-enter the cache (re-warm).
+        # One raising listener must not starve the rest or propagate into
+        # the resizing caller — count it and continue.
         for fn in list(_EVICTION_LISTENERS):
             try:
                 fn(tuple(evicted), "resize")
             except Exception:
-                pass
+                with _CACHE_LOCK:
+                    _CACHE_STATS["listener_errors"] += 1
     return plan_cache_info()
 
 
@@ -222,7 +274,7 @@ def plan_cache_peek(key):
         return _PLAN_CACHE.get(key)
 
 
-def _build_once(key, build):
+def _build_once(key, build, timeout: float | None = None):
     """Fetch ``key`` from the LRU, or run ``build()`` exactly once.
 
     Single-flight across threads: the first requester of a missing key
@@ -233,7 +285,17 @@ def _build_once(key, build):
     and retries.  With ``PLAN_CACHE_SIZE == 0`` the published entry is
     evicted immediately, so every caller builds — the documented
     cache-disabled semantics.
+
+    ``timeout`` (default :data:`DEFAULT_BUILD_TIMEOUT`) bounds the total
+    time a *waiter* blocks on another thread's in-flight build: past it,
+    :class:`PlanBuildTimeout` is raised (counted as ``wait_timeouts`` in
+    :func:`plan_cache_info`) instead of blocking unboundedly on a doomed
+    or wedged owner.  The owner itself runs its build to completion —
+    hung *background* builds are the PlanBuilder watchdog's job.
     """
+    if timeout is None:
+        timeout = DEFAULT_BUILD_TIMEOUT
+    deadline = None if timeout is None else time.monotonic() + timeout
     while True:
         with _CACHE_LOCK:
             plan = _PLAN_CACHE.get(key)
@@ -256,7 +318,15 @@ def _build_once(key, build):
                     _BUILDING.pop(key, None)
                 done.set()
             return plan
-        done.wait()
+        remaining = None if deadline is None else deadline - time.monotonic()
+        if (remaining is not None and remaining <= 0) \
+                or not done.wait(remaining):
+            with _CACHE_LOCK:
+                _CACHE_STATS["wait_timeouts"] += 1
+            raise PlanBuildTimeout(
+                f"waited {timeout:.3f}s on another thread's in-flight "
+                f"build of plan key {key[2:4]}; the build may still land "
+                "later — retry, or serve a fallback plan")
 
 
 def _single_plan_key(a: CSC, b: CSC, method: str, backend: str,
@@ -315,21 +385,24 @@ def plan_cache_key(a: CSC, b: CSC, method: str | None = None, *,
 
 def _cached_plan(a: CSC, b: CSC, method: str, backend: str,
                  params: dict,
-                 stream_limit: int | None = None) -> SpgemmPlan:
+                 stream_limit: int | None = None,
+                 build_timeout: float | None = None) -> SpgemmPlan:
     key = _single_plan_key(a, b, method, backend, params, stream_limit)
     return _build_once(
         key,
         lambda: plan_spgemm(a, b, method, backend=backend,
                             t=params.get("t"), b_min=params.get("b_min"),
                             b_max=params.get("b_max"),
-                            stream_limit=stream_limit))
+                            stream_limit=stream_limit),
+        timeout=build_timeout)
 
 
 def cached_plan(a: CSC, b: CSC, method: str | None = None, *,
                 backend: str | None = None, t: float | None = None,
                 b_min: int | None = None, b_max: int | None = None,
                 stream_limit: int | None = None,
-                shards: int | None = None) -> SpgemmPlan:
+                shards: int | None = None,
+                build_timeout: float | None = None) -> SpgemmPlan:
     """Fetch-or-build a plan through the shared LRU (public accessor).
 
     The plan-holding companion of :func:`spgemm`: out-of-package callers
@@ -340,6 +413,9 @@ def cached_plan(a: CSC, b: CSC, method: str | None = None, *,
     :func:`~repro.core.planner.plan_spgemm_tiled`); ``stream_limit``
     overrides the plan-memory guard for this plan only (part of the cache
     key), without mutating the global ``fast.STREAM_MAX_PRODUCTS`` knob.
+    ``build_timeout`` bounds how long this call may wait on *another*
+    thread's in-flight build of the same key (:class:`PlanBuildTimeout`
+    past it; default :data:`DEFAULT_BUILD_TIMEOUT`).
     """
     method, backend = _resolve_method_backend(method, backend)
     _check_shards(backend, shards)
@@ -353,7 +429,8 @@ def cached_plan(a: CSC, b: CSC, method: str | None = None, *,
     return _cached_plan(a, b, method, backend,
                         resolve_params(method, t=t, b_min=b_min,
                                        b_max=b_max),
-                        stream_limit=stream_limit)
+                        stream_limit=stream_limit,
+                        build_timeout=build_timeout)
 
 
 def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,

@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fast
+from repro.core import fast, faults
 from repro.sparse.format import CSC, BatchedCSC
 
 # int32 device indices: the plan-memory guard caps streams far below 2**31
@@ -127,6 +127,7 @@ def device_stream(plan) -> Optional[DeviceStream]:
         return None
     memo = plan._stream_memo
     if "device" not in memo:
+        faults.check("device_lift", key=getattr(plan, "backend", None))
         check_int32_stream(plan, s)
         seg_ids = stream_seg_ids(s)
         with jax.ensure_compile_time_eval():

@@ -16,22 +16,81 @@ locked plan LRU — the single-flight protocol there guarantees a build
 racing a foreground request runs the symbolic phase once, whichever
 thread gets there first.  The builder adds its own layer of dedup on top
 (``submit`` of a key already queued or building is a no-op) so a hot
-pattern arriving on every tick does not flood the queue, and a
-``max_pending`` bound sheds excess work under adversarial all-miss
-traffic instead of growing the queue without bound.
+pattern arriving on every tick does not flood the queue.
+
+Resilience (DESIGN.md §14): failed attempts retry under a seeded,
+jittered capped-exponential :class:`RetryPolicy`; per-task deadlines are
+enforced by a watchdog thread that marks an over-deadline task failed
+(:class:`BuildTimeoutError`) and *recycles the worker* — the wedged
+thread is abandoned (daemon, unwedges eventually) and a fresh worker
+takes its slot, so one hung compile can never eat a worker slot forever.
+Excess load is governed by a pluggable backpressure policy
+(``"shed-newest"``, ``"shed-by-key-age"``, ``"block-with-deadline"``)
+instead of the old binary shed.  Every failure path here is exercised by
+real injected faults (``core.faults``) in ``tests/test_resilience.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import queue
+import random
 import threading
 import time
+from collections import deque
 from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.core import api
+from repro.core import api, faults
+
+#: backpressure policies for PlanBuilder(max_pending=..., backpressure=...)
+BACKPRESSURE_POLICIES = ("shed-newest", "shed-by-key-age",
+                         "block-with-deadline")
+
+_WATCHDOG_TICK = 0.05   # seconds between watchdog deadline scans
+
+
+class BuildTimeoutError(TimeoutError):
+    """A build exceeded its deadline; the watchdog failed the task and
+    recycled the worker running it."""
+
+
+class BuildCancelled(RuntimeError):
+    """A queued task was dropped before starting (non-drain shutdown)."""
+
+
+class BuildShed(RuntimeError):
+    """A queued task was evicted by backpressure (``shed-by-key-age``)."""
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Capped-exponential backoff with deterministic (seeded) jitter.
+
+    Attempt ``k`` (1-based) that fails with ``k < max_attempts`` sleeps
+    ``min(max_delay, base_delay * 2**(k-1))`` scaled by a jitter factor
+    drawn uniformly from ``[1 - jitter, 1 + jitter]`` before retrying.
+    Deadline (watchdog) expiry does NOT retry — a hung build is assumed
+    to hang again; only raising builds are considered transient.
+    """
+
+    max_attempts: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 2.0
+    jitter: float = 0.5
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(
+                f"max_attempts must be >= 1, got {self.max_attempts}")
+
+    def delay(self, attempt: int, rng: random.Random) -> float:
+        d = min(self.max_delay, self.base_delay * (2 ** (attempt - 1)))
+        if self.jitter:
+            d *= 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
+        return max(0.0, d)
 
 
 @dataclasses.dataclass
@@ -43,10 +102,33 @@ class BuildResult:
     plan: Any = None
     error: Optional[BaseException] = None
     seconds: float = 0.0
+    attempts: int = 1
 
     @property
     def ok(self) -> bool:
         return self.error is None
+
+
+@dataclasses.dataclass
+class _Task:
+    tag: Any
+    key: Optional[tuple]
+    fn: Callable[[], Any]
+    deadline: Optional[float]       # per-attempt wall budget, seconds
+    max_attempts: int
+    enqueued: float = 0.0
+
+
+class _Running:
+    """One attempt in flight on one worker thread (watchdog bookkeeping)."""
+
+    __slots__ = ("task", "started", "deadline", "abandoned")
+
+    def __init__(self, task: _Task):
+        self.task = task
+        self.started = time.monotonic()
+        self.deadline = task.deadline
+        self.abandoned = False
 
 
 def warm_plan(plan) -> None:
@@ -59,6 +141,7 @@ def warm_plan(plan) -> None:
     first use.  Guarded plans (``plan.stream is None``) have nothing to
     warm.  Safe to call on any plan; unknown plan types are ignored.
     """
+    faults.check("warm_compile", key=getattr(plan, "backend", None))
     stream = getattr(plan, "stream", None)
     if stream is None:
         return
@@ -86,30 +169,63 @@ class PlanBuilder:
     compilation is itself internally parallel, and serving cares about
     the *foreground* tick latency, not build throughput.  All workers are
     daemon threads; call :meth:`shutdown` (or use the context manager) for
-    a deterministic drain.
+    a deterministic exit.
+
+    Resilience knobs (DESIGN.md §14): ``retry`` (a :class:`RetryPolicy`;
+    failed attempts back off and retry inside the worker),
+    ``build_deadline`` (default per-attempt wall budget — past it the
+    watchdog fails the task with :class:`BuildTimeoutError` and recycles
+    the worker), ``backpressure`` + ``max_pending`` (what happens when
+    the queue is full: ``"shed-newest"`` rejects the new submit,
+    ``"shed-by-key-age"`` evicts the oldest still-queued task to admit
+    the new one, ``"block-with-deadline"`` blocks the submitter up to
+    ``block_timeout`` seconds for a slot, then sheds).
     """
 
-    def __init__(self, workers: int = 1, max_pending: int | None = None):
+    def __init__(self, workers: int = 1, max_pending: int | None = None,
+                 *, backpressure: str = "shed-newest",
+                 retry: RetryPolicy | None = None,
+                 build_deadline: float | None = None,
+                 block_timeout: float = 1.0):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
-        self._q: "queue.Queue" = queue.Queue()
+        if backpressure not in BACKPRESSURE_POLICIES:
+            raise ValueError(
+                f"unknown backpressure policy {backpressure!r}; one of "
+                f"{BACKPRESSURE_POLICIES}")
+        self._queue: "deque[_Task]" = deque()
         self._completions: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._inflight: set = set()     # plan keys queued or building
         self._pending = 0               # tasks queued or running
-        self._stopped = False
+        self._stopped = False           # no new submissions
+        self._exit_event = threading.Event()    # workers + watchdog leave
+        self._stop_event = threading.Event()    # cuts backoff sleeps short
+        self._running: "dict[threading.Thread, _Running]" = {}
         self.max_pending = max_pending
+        self.backpressure = backpressure
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.build_deadline = build_deadline
+        self.block_timeout = block_timeout
+        self._jitter_rng = random.Random(self.retry.seed)
         self.stats = {"submitted": 0, "completed": 0, "failed": 0,
-                      "deduped": 0, "shed": 0, "cached": 0, "rewarmed": 0}
+                      "deduped": 0, "shed": 0, "cached": 0, "rewarmed": 0,
+                      "retries": 0, "timed_out": 0, "cancelled": 0,
+                      "workers_recycled": 0}
         self._known: dict = {}          # plan key -> submit() kwargs
         self._rewarm_cb = None
+        self._worker_seq = workers
         self._threads = [
             threading.Thread(target=self._worker, daemon=True,
                              name=f"plan-builder-{i}")
             for i in range(workers)]
         for t in self._threads:
             t.start()
+        self._watchdog_thread = threading.Thread(
+            target=self._watchdog, daemon=True, name="plan-builder-watchdog")
+        self._watchdog_thread.start()
+        api._register_builder(self)
 
     # -- submission ----------------------------------------------------------
 
@@ -117,17 +233,23 @@ class PlanBuilder:
                backend: str = "jax", t: float | None = None,
                b_min: int | None = None, b_max: int | None = None,
                stream_limit: int | None = None, warm: bool = True,
+               deadline: float | None = None, retries: int | None = None,
                tag: Any = None) -> str:
         """Enqueue a background build of ``cached_plan(a, b, method, ...)``.
 
-        Returns a status string, never blocks on the build itself:
+        Returns a status string, never blocks on the build itself (except
+        under ``backpressure="block-with-deadline"``, which may wait up to
+        ``block_timeout`` for a queue slot):
 
         * ``"cached"``    — the plan is already in the LRU; nothing queued.
         * ``"inflight"``  — the same key is already queued or building.
-        * ``"shed"``      — ``max_pending`` reached; the build was dropped
-          (the caller keeps using its fallback and may resubmit later).
+        * ``"shed"``      — backpressure dropped the build (the caller
+          keeps using its fallback and may resubmit later).
         * ``"submitted"`` — queued; a :class:`BuildResult` will appear in
           :meth:`poll` when it lands in the LRU.
+
+        ``deadline`` overrides the builder's ``build_deadline`` for this
+        task; ``retries`` overrides ``retry.max_attempts``.
         """
         key = api.plan_cache_key(a, b, method, backend=backend, t=t,
                                  b_min=b_min, b_max=b_max,
@@ -142,19 +264,6 @@ class PlanBuilder:
         if api.plan_cache_peek(key) is not None:
             self.stats["cached"] += 1
             return "cached"
-        with self._lock:
-            if self._stopped:
-                raise RuntimeError("PlanBuilder is shut down")
-            if key in self._inflight:
-                self.stats["deduped"] += 1
-                return "inflight"
-            if self.max_pending is not None \
-                    and self._pending >= self.max_pending:
-                self.stats["shed"] += 1
-                return "shed"
-            self._inflight.add(key)
-            self._pending += 1
-            self.stats["submitted"] += 1
 
         def build():
             plan = api.cached_plan(a, b, method, backend=backend, t=t,
@@ -164,27 +273,71 @@ class PlanBuilder:
                 warm_plan(plan)
             return plan
 
-        self._q.put((key if tag is None else tag, key, build))
-        return "submitted"
+        return self._enqueue(_Task(
+            tag=key if tag is None else tag, key=key, fn=build,
+            deadline=self.build_deadline if deadline is None else deadline,
+            max_attempts=(self.retry.max_attempts if retries is None
+                          else max(1, int(retries)))))
 
-    def submit_task(self, fn: Callable[[], Any], tag: Any = None) -> str:
+    def submit_task(self, fn: Callable[[], Any], tag: Any = None, *,
+                    deadline: float | None = None,
+                    retries: int | None = None) -> str:
         """Enqueue an arbitrary warm job (no key dedup).
 
         The serving engine uses this to trace + compile its jitted sparse
         decode step in the background (every overlay plan builds through
         the locked LRU as a side effect).  The callable's return value
-        rides in ``BuildResult.plan``.
+        rides in ``BuildResult.plan``.  Default ``retries=1``: arbitrary
+        callables are not assumed idempotent, so the builder does not
+        retry them unless asked.
         """
-        with self._lock:
+        return self._enqueue(_Task(
+            tag=tag, key=None, fn=fn,
+            deadline=self.build_deadline if deadline is None else deadline,
+            max_attempts=1 if retries is None else max(1, int(retries))))
+
+    def _enqueue(self, task: _Task) -> str:
+        with self._cv:
             if self._stopped:
                 raise RuntimeError("PlanBuilder is shut down")
+            if task.key is not None and task.key in self._inflight:
+                self.stats["deduped"] += 1
+                return "inflight"
             if self.max_pending is not None \
                     and self._pending >= self.max_pending:
-                self.stats["shed"] += 1
-                return "shed"
+                if self.backpressure == "block-with-deadline":
+                    ok = self._cv.wait_for(
+                        lambda: self._stopped
+                        or self._pending < self.max_pending,
+                        timeout=self.block_timeout)
+                    if self._stopped:
+                        raise RuntimeError("PlanBuilder is shut down")
+                    if not ok:
+                        self.stats["shed"] += 1
+                        return "shed"
+                    if task.key is not None \
+                            and task.key in self._inflight:
+                        # a duplicate was admitted while we blocked
+                        self.stats["deduped"] += 1
+                        return "inflight"
+                elif self.backpressure == "shed-by-key-age" and self._queue:
+                    # evict the oldest still-queued task to admit the new
+                    # one; its submitter learns through the completion
+                    old = self._queue.popleft()
+                    self.stats["shed"] += 1
+                    self._finalize_locked(old, error=BuildShed(
+                        "evicted from the build queue by newer work "
+                        "(backpressure: shed-by-key-age)"))
+                else:   # shed-newest, or nothing queued to evict
+                    self.stats["shed"] += 1
+                    return "shed"
+            if task.key is not None:
+                self._inflight.add(task.key)
+            task.enqueued = time.monotonic()
             self._pending += 1
             self.stats["submitted"] += 1
-        self._q.put((tag, None, fn))
+            self._queue.append(task)
+            self._cv.notify()
         return "submitted"
 
     def plan_or_fallback(self, a, b, method: str | None = None, *,
@@ -277,28 +430,57 @@ class PlanBuilder:
         with self._lock:
             return self._pending
 
+    def info(self) -> dict:
+        """Stats + live queue depth / worker counts — surfaced alongside
+        the cache telemetry in ``plan_cache_info()['builders']``."""
+        with self._lock:
+            return dict(self.stats, pending=self._pending,
+                        queue_depth=len(self._queue),
+                        running=len(self._running),
+                        workers=len(self._threads),
+                        max_pending=self.max_pending,
+                        backpressure=self.backpressure)
+
     def wait_idle(self, timeout: float | None = None) -> bool:
         """Block until every queued/running task completed (tests, drain)."""
         with self._cv:
             return self._cv.wait_for(lambda: self._pending == 0, timeout)
 
-    def shutdown(self, wait: bool = True) -> None:
-        """Stop accepting work; optionally drain the queue and join."""
+    def shutdown(self, wait: bool = True, drain: bool = False) -> None:
+        """Stop accepting work and exit the workers.  Idempotent: a second
+        call is a no-op.
+
+        ``drain=True`` finishes all queued work first (blocks until the
+        queue and running tasks empty, then joins).  ``drain=False`` (the
+        default) cancels queued-but-unstarted tasks — each is delivered to
+        :meth:`poll` with a :class:`BuildCancelled` error and counted as
+        ``cancelled`` — and cuts retry backoffs short; running attempts
+        finish.  ``wait=False`` skips joining the worker threads.
+        """
         self.disable_rewarm()
-        with self._lock:
+        with self._cv:
             if self._stopped:
                 return
             self._stopped = True
-        if not wait:
-            # unblock workers with one sentinel each; queued tasks that
-            # run anyway are harmless (they only populate the shared LRU)
-            for _ in self._threads:
-                self._q.put(None)
-            return
-        for _ in self._threads:
-            self._q.put(None)
-        for t in self._threads:
-            t.join()
+        api._unregister_builder(self)
+        if drain:
+            self.wait_idle()
+        else:
+            self._stop_event.set()
+            with self._cv:
+                cancelled, self._queue = list(self._queue), deque()
+                for task in cancelled:
+                    self.stats["cancelled"] += 1
+                    self._finalize_locked(task, error=BuildCancelled(
+                        "builder shut down before the task started"))
+        self._stop_event.set()
+        self._exit_event.set()
+        with self._cv:
+            self._cv.notify_all()
+        if wait:
+            for t in list(self._threads):
+                t.join()
+            self._watchdog_thread.join()
 
     def __enter__(self):
         return self
@@ -307,24 +489,125 @@ class PlanBuilder:
         self.shutdown()
         return False
 
+    # -- internals -----------------------------------------------------------
+
+    def _finalize_locked(self, task: _Task, plan=None, error=None,
+                         seconds: float = 0.0, attempts: int = 1) -> None:
+        """Account one task's terminal state (lock held) and publish it."""
+        if task.key is not None:
+            self._inflight.discard(task.key)
+        self._pending -= 1
+        if error is None:
+            self.stats["completed"] += 1
+        elif isinstance(error, Exception) \
+                and not isinstance(error, (BuildCancelled, BuildShed)):
+            self.stats["failed"] += 1
+        self._cv.notify_all()
+        self._completions.put(BuildResult(task.tag, task.key, plan, error,
+                                          seconds, attempts))
+
+    def _next_task(self) -> Optional[_Task]:
+        with self._cv:
+            while True:
+                if self._queue:
+                    return self._queue.popleft()
+                if self._exit_event.is_set():
+                    return None
+                self._cv.wait()
+
     def _worker(self) -> None:
+        me = threading.current_thread()
         while True:
-            task = self._q.get()
+            task = self._next_task()
             if task is None:
                 return
-            tag, key, fn = task
-            t0 = time.perf_counter()
+            if not self._run_task(me, task):
+                return      # abandoned by the watchdog: slot was recycled
+
+    def _run_task(self, me: threading.Thread, task: _Task) -> bool:
+        """Run one task to a terminal state (retrying per policy).
+
+        Returns False when the watchdog abandoned this thread mid-attempt
+        (the task was already finalized and the worker slot recycled) —
+        the zombie thread must exit instead of touching shared state.
+        """
+        attempt = 0
+        while True:
+            attempt += 1
+            rec = _Running(task)
+            with self._lock:
+                self._running[me] = rec
             plan, err = None, None
+            t0 = time.perf_counter()
             try:
-                plan = fn()
+                faults.check("builder_worker",
+                             key=task.key if task.key is not None
+                             else task.tag)
+                with self._lock:
+                    if rec.abandoned:
+                        # the watchdog finalized this attempt while we were
+                        # wedged before fn even started — don't burn the
+                        # zombie thread on a build nobody will receive
+                        return False
+                plan = task.fn()
             except BaseException as e:  # noqa: BLE001 — reported via poll()
                 err = e
             dt = time.perf_counter() - t0
             with self._cv:
-                if key is not None:
-                    self._inflight.discard(key)
-                self._pending -= 1
-                self.stats["failed" if err is not None
-                           else "completed"] += 1
-                self._cv.notify_all()
-            self._completions.put(BuildResult(tag, key, plan, err, dt))
+                mine = self._running.pop(me, None)
+                if rec.abandoned or mine is not rec:
+                    return False    # watchdog finalized + replaced us
+                if err is None:
+                    self._finalize_locked(task, plan=plan, seconds=dt,
+                                          attempts=attempt)
+                    return True
+                if attempt >= task.max_attempts \
+                        or self._stop_event.is_set():
+                    self._finalize_locked(task, error=err, seconds=dt,
+                                          attempts=attempt)
+                    return True
+                self.stats["retries"] += 1
+                backoff = self.retry.delay(attempt, self._jitter_rng)
+            # outside the lock: backoff sleep, cut short by shutdown
+            self._stop_event.wait(backoff)
+            if self._stop_event.is_set():
+                with self._cv:
+                    self._finalize_locked(task, error=err, seconds=dt,
+                                          attempts=attempt)
+                return True
+
+    def _watchdog(self) -> None:
+        """Fail over-deadline attempts and recycle their workers.
+
+        A worker past its task's deadline is presumed wedged (a hung
+        device compile, a stuck gather): the task is finalized as failed
+        with :class:`BuildTimeoutError`, the thread is abandoned (daemon;
+        it exits on its own once the hang releases — its late result is
+        discarded) and a fresh worker thread takes the slot, so capacity
+        is never permanently lost.
+        """
+        while not self._exit_event.wait(_WATCHDOG_TICK):
+            now = time.monotonic()
+            with self._cv:
+                for th, rec in list(self._running.items()):
+                    if rec.deadline is None or rec.abandoned:
+                        continue
+                    if now - rec.started < rec.deadline:
+                        continue
+                    rec.abandoned = True
+                    del self._running[th]
+                    self.stats["timed_out"] += 1
+                    self.stats["workers_recycled"] += 1
+                    self._finalize_locked(rec.task, error=BuildTimeoutError(
+                        f"build exceeded its {rec.deadline:.3f}s deadline; "
+                        "worker recycled"))
+                    try:
+                        self._threads.remove(th)
+                    except ValueError:
+                        pass
+                    nt = threading.Thread(
+                        target=self._worker, daemon=True,
+                        name=f"plan-builder-{self._worker_seq}")
+                    self._worker_seq += 1
+                    self._threads.append(nt)
+                    nt.start()

@@ -26,7 +26,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import backends
+from repro.core import backends, faults
 from repro.core.analysis import Preprocess, preprocess
 from repro.core.cost import AUTO_CANDIDATES, CostConstants, choose_method
 import repro.core.fast as _fast
@@ -473,6 +473,7 @@ def plan_spgemm(
     ``stream_limit`` acting as the *per-shard* plan-memory guard.
     ``shards`` is mesh-only; any other backend rejects it.
     """
+    faults.check("plan_spgemm", key=(backend, method))
     if shards is not None and backend != "mesh":
         raise ValueError(
             f"shards= applies only to backend='mesh', not {backend!r}")

@@ -1,5 +1,12 @@
 """Serving substrate: caches (models.init_cache) + batched engine."""
 
 from repro.serving.engine import Request, ServeEngine
+from repro.serving.resilience import (
+    CircuitBreaker,
+    Health,
+    breaker_for,
+    reset_breakers,
+)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "CircuitBreaker", "Health",
+           "breaker_for", "reset_breakers"]

@@ -14,12 +14,21 @@ With a ``plan_builder``, the trace + XLA compile of that step happens on a
 background thread; until it lands, ticks fall back to the eager host
 product stream (:func:`~repro.models.lm.decode_step_loop`) so no tick ever
 blocks on a plan build.
+
+Resilience (DESIGN.md §14): each background warm is governed by a
+:class:`~repro.serving.resilience.CircuitBreaker` — failed or timed-out
+warms degrade the engine's health, repeated failures pin it to the
+fallback path (no more warm submissions) until a cooldown elapses and a
+half-open probe warm succeeds.  Greedy decode output is bit-identical on
+both paths, so every transition is invisible to callers except in
+latency.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 from typing import Optional
 
@@ -27,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.models.lm import decode_step, decode_step_loop, init_cache
+from repro.serving.resilience import CircuitBreaker, Health
 
 
 @dataclasses.dataclass
@@ -45,7 +56,8 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg, params, *, max_batch: int = 4,
                  cache_len: int = 256, seed: int = 0, aux=None,
-                 sparse_ffn=None, plan_builder=None):
+                 sparse_ffn=None, plan_builder=None, breaker=None,
+                 warm_deadline: float | None = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -63,34 +75,128 @@ class ServeEngine:
         self._rid = 0
         self.sparse_ffn = sparse_ffn
         self.plan_builder = plan_builder
-        self.tick_stats = {"jit_ticks": 0, "fallback_ticks": 0}
+        self.warm_deadline = warm_deadline
+        self.tick_stats = {"jit_ticks": 0, "fallback_ticks": 0,
+                           "warm_submits": 0, "warm_failures": 0,
+                           "health": str(Health.HEALTHY)}
         self._step = jax.jit(
             lambda p, t, c, l: decode_step(p, cfg, t, c, l,
                                            sparse_ffn=sparse_ffn))
         self._sparse_ready = threading.Event()
+        self._warm_lock = threading.Lock()
+        self._warm_gen = 0          # invalidates stale/abandoned warm tasks
+        self._warm_inflight = False
+        self._warm_started = 0.0
+        self._closed = False
         if sparse_ffn is None or plan_builder is None:
             # No overlay (plain dense serving) or no builder to hide the
             # compile behind — first jitted tick pays it inline, as before.
+            self.breaker = None
             self._sparse_ready.set()
         else:
-            plan_builder.submit_task(self._warm_sparse_step,
-                                     tag=("serve-warm", id(self)))
+            self.breaker = breaker if breaker is not None \
+                else CircuitBreaker()
+            self._maybe_rewarm()
 
-    def _warm_sparse_step(self):
+    def _maybe_rewarm(self) -> None:
+        """Submit a background warm if health and capacity allow.
+
+        Called from ``__init__`` and the top of every :meth:`step`: the
+        tick path is where failures surface (a warm that never lands), so
+        the tick path is also where recovery is driven — when the breaker
+        pins, submissions stop; when its cooldown elapses, the next tick's
+        call here launches the half-open probe.  Never blocks.
+        """
+        if self._closed or self._sparse_ready.is_set() \
+                or self.sparse_ffn is None or self.plan_builder is None:
+            return
+        with self._warm_lock:
+            if self._warm_inflight:
+                # engine-side deadline: if the warm wedged past the builder
+                # watchdog (or no watchdog is armed), abandon it here so
+                # the breaker can count it and a fresh warm can launch
+                if self.warm_deadline is not None and (
+                        time.monotonic() - self._warm_started
+                        > self.warm_deadline + 0.25):
+                    self._warm_gen += 1
+                    self._warm_inflight = False
+                    self.tick_stats["warm_failures"] += 1
+                    self.breaker.record_failure()
+                return
+            if not self.breaker.allow_attempt():
+                return
+            self._warm_gen += 1
+            gen = self._warm_gen
+            self._warm_inflight = True
+            self._warm_started = time.monotonic()
+            self.tick_stats["warm_submits"] += 1
+        status = self.plan_builder.submit_task(
+            lambda: self._warm_task(gen), tag=("serve-warm", id(self), gen),
+            deadline=self.warm_deadline, retries=1)
+        if status == "shed":
+            with self._warm_lock:
+                if self._warm_gen == gen:
+                    self._warm_inflight = False
+            self.breaker.probe_cancelled()
+
+    def _warm_task(self, gen: int):
         """Background warm: trace + compile the jitted sparse step.
 
         Runs on a PlanBuilder worker thread against throwaway zero inputs
         of serving shape; every overlay plan builds through the locked LRU
-        as a side effect.  Sets ``_sparse_ready`` so the next tick promotes
-        from the host fallback to the compiled device step.
+        as a side effect.  On success sets ``_sparse_ready`` so the next
+        tick promotes from the host fallback to the compiled device step;
+        either outcome is reported to the breaker via :meth:`_warm_done`
+        (stale generations — a zombie thread finishing after the engine
+        abandoned it — are discarded there).
         """
-        cache0 = init_cache(self.cfg, self.max_batch, self.cache_len,
-                            dtype=jnp.float32)
-        tok0 = jnp.zeros((self.max_batch, 1), jnp.int32)
-        len0 = jnp.zeros(self.max_batch, jnp.int32)
-        out = self._step(self.params, tok0, cache0, len0)
-        jax.block_until_ready(out)
-        self._sparse_ready.set()
+        if self._closed:
+            return
+        try:
+            faults.check("warm_compile", key=("serve-warm", gen))
+            cache0 = init_cache(self.cfg, self.max_batch, self.cache_len,
+                                dtype=jnp.float32)
+            tok0 = jnp.zeros((self.max_batch, 1), jnp.int32)
+            len0 = jnp.zeros(self.max_batch, jnp.int32)
+            out = self._step(self.params, tok0, cache0, len0)
+            jax.block_until_ready(out)
+        except BaseException as e:
+            self._warm_done(gen, e)
+            raise       # the builder's completion/stats still see it
+        self._warm_done(gen, None)
+
+    def _warm_done(self, gen: int, err) -> None:
+        with self._warm_lock:
+            if gen != self._warm_gen or self._closed:
+                return      # stale generation: already abandoned/replaced
+            self._warm_inflight = False
+            if err is None:
+                self.breaker.record_success()
+                self._sparse_ready.set()
+            else:
+                self.tick_stats["warm_failures"] += 1
+                self.breaker.record_failure()
+
+    def close(self) -> None:
+        """Detach from the (possibly shared) builder: no further warms.
+
+        Invalidates any in-flight warm so its late completion is ignored.
+        Never touches the builder itself — other engines sharing it keep
+        running.  Idempotent.
+        """
+        with self._warm_lock:
+            self._closed = True
+            self._warm_gen += 1
+            self._warm_inflight = False
+
+    def stats(self) -> dict:
+        """Tick counters + breaker health (+ builder info when attached)."""
+        out = dict(self.tick_stats)
+        if self.breaker is not None:
+            out["breaker"] = self.breaker.info()
+        if self.plan_builder is not None:
+            out["builder"] = self.plan_builder.info()
+        return out
 
     def sparse_ready(self) -> bool:
         """True once ticks run the compiled (jitted) decode step."""
@@ -174,6 +280,9 @@ class ServeEngine:
 
     def step(self):
         """One engine tick: admit, decode, sample, retire."""
+        if self.breaker is not None:
+            self._maybe_rewarm()
+            self.tick_stats["health"] = str(self.breaker.health)
         self._admit()
         if all(s is None for s in self.slots):
             return False

@@ -1,0 +1,474 @@
+"""Chaos suite: the resilience layer under real injected faults.
+
+DESIGN.md §14 contracts, exercised with seeded deterministic faults from
+``core.faults`` rather than mocks: retry/backoff recovers transient build
+failures, the watchdog fails hung builds and recycles the worker (no slot
+is permanently lost), a synchronous single-flight waiter never blocks
+past its deadline, backpressure policies shed deliberately, and the
+serving circuit breaker degrades → pins → recovers via half-open probe
+with greedy decode output bit-identical to a fault-free run throughout.
+"""
+
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (
+    BuildShed, BuildTimeoutError, InjectedFault, PlanBuildTimeout,
+    PlanBuilder, RetryPolicy, api, cached_plan, faults, plan_cache_clear,
+    plan_cache_info,
+)
+from repro.models import init_model, smoke
+from repro.models.sparse_ffn import sparsify_ffn_params
+from repro.serving import CircuitBreaker, Health, ServeEngine
+from repro.sparse import random_density_csc
+
+
+@pytest.fixture(autouse=True)
+def fresh_cache():
+    plan_cache_clear()
+    yield
+    faults.uninstall()      # never leak a fault plan into the next test
+    plan_cache_clear()
+
+
+def _pair(seed=0, n=24, density=0.2):
+    return (random_density_csc(n, n, density, seed=2 * seed),
+            random_density_csc(n, n, density, seed=2 * seed + 1))
+
+
+# ---------------------------------------------------------------------------
+# fault-injection machinery
+# ---------------------------------------------------------------------------
+
+
+def _fire_pattern(seed):
+    plan = faults.FaultPlan(
+        [faults.FaultRule("plan_spgemm", "fail", rate=0.5)], seed=seed)
+    pattern = []
+    for _ in range(32):
+        try:
+            plan.check("plan_spgemm", key=("jax", "expand"))
+            pattern.append(0)
+        except InjectedFault:
+            pattern.append(1)
+    return pattern
+
+
+def test_rate_faults_replay_deterministically():
+    p = _fire_pattern(seed=7)
+    assert p == _fire_pattern(seed=7)
+    assert 0 < sum(p) < len(p)          # actually probabilistic
+    assert p != _fire_pattern(seed=8)   # and seed-sensitive
+
+
+def test_every_fires_on_exact_calls():
+    with faults.inject(faults.FaultRule("plan_spgemm", "fail", every=3,
+                                        max_fires=2)) as fp:
+        hits = []
+        for i in range(1, 10):
+            try:
+                faults.check("plan_spgemm", key="k")
+            except InjectedFault:
+                hits.append(i)
+        assert hits == [3, 6]           # every 3rd call, capped at 2 fires
+        assert fp.fired("plan_spgemm") == 2
+
+
+def test_match_scopes_by_key():
+    """A ``match="jax"`` rule must never touch host-backend calls — the
+    guarantee that lets faults target background builds while the
+    foreground fallback stays clean."""
+    with faults.inject(faults.FaultRule("plan_spgemm", "fail", every=1,
+                                        match="jax")):
+        faults.check("plan_spgemm", key=("host", "expand"))  # untouched
+        with pytest.raises(InjectedFault):
+            faults.check("plan_spgemm", key=("jax", "expand"))
+
+
+def test_uninstall_releases_hangs():
+    with faults.inject(faults.FaultRule("builder_worker", "hang",
+                                        every=1, seconds=60)):
+        t0 = time.monotonic()
+        done = threading.Event()
+
+        def hang_then_done():
+            faults.check("builder_worker", key="x")
+            done.set()
+
+        threading.Thread(target=hang_then_done, daemon=True).start()
+        time.sleep(0.05)
+        assert not done.is_set()        # genuinely hung
+    assert done.wait(5)                 # context exit released it
+    assert time.monotonic() - t0 < 10   # not the 60s hang budget
+
+
+def test_one_fault_plan_at_a_time():
+    with faults.inject(faults.FaultRule("plan_spgemm", "fail")):
+        with pytest.raises(RuntimeError, match="already installed"):
+            faults.install(faults.FaultPlan([]))
+
+
+def test_checks_are_noops_without_a_plan():
+    faults.check("plan_spgemm", key="anything")     # must not raise
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff / watchdog (tentpole part 2)
+# ---------------------------------------------------------------------------
+
+
+def test_retry_recovers_transient_build_failures():
+    a, b = _pair(0)
+    with faults.inject(faults.FaultRule("builder_worker", "fail",
+                                        every=1, max_fires=2)):
+        with PlanBuilder(retry=RetryPolicy(base_delay=0.01)) as builder:
+            assert builder.submit(a, b, "expand", backend="jax") \
+                == "submitted"
+            assert builder.wait_idle(30)
+            (res,) = builder.poll()
+    assert res.ok and res.attempts == 3     # 2 injected failures + success
+    assert builder.stats["retries"] == 2
+    assert builder.stats["completed"] == 1
+    assert builder.stats["failed"] == 0
+    assert api.plan_cache_peek(res.key) is not None     # plan landed
+
+
+def test_retries_exhausted_reports_failure():
+    a, b = _pair(1)
+    with faults.inject(faults.FaultRule("builder_worker", "fail", every=1)):
+        with PlanBuilder(retry=RetryPolicy(max_attempts=2,
+                                           base_delay=0.01)) as builder:
+            builder.submit(a, b, "expand", backend="jax")
+            assert builder.wait_idle(30)
+            (res,) = builder.poll()
+    assert not res.ok and isinstance(res.error, InjectedFault)
+    assert res.attempts == 2
+    assert builder.stats["failed"] == 1
+
+
+def test_watchdog_recycles_hung_worker():
+    """A hung build is failed at its deadline and its worker replaced —
+    the builder keeps serving new work with full capacity (acceptance:
+    no builder worker is permanently lost)."""
+    with faults.inject(faults.FaultRule("builder_worker", "hang",
+                                        every=1, max_fires=1, seconds=60)):
+        with PlanBuilder(build_deadline=0.2) as builder:
+            builder.submit_task(lambda: "wedged", tag="hung")
+            assert builder.wait_idle(30)
+            (res,) = builder.poll()
+            assert isinstance(res.error, BuildTimeoutError)
+            assert builder.stats["timed_out"] == 1
+            assert builder.stats["workers_recycled"] == 1
+            assert builder.info()["workers"] == 1   # capacity restored
+
+            # the recycled worker serves the next task normally
+            builder.submit_task(lambda: "fresh", tag="after")
+            assert builder.wait_idle(30)
+            (res2,) = builder.poll()
+            assert res2.ok and res2.plan == "fresh"
+
+
+def test_waiter_deadline_on_single_flight_build(monkeypatch):
+    """A sync caller joining another thread's in-flight build times out at
+    its own deadline instead of blocking for the build's full duration."""
+    a, b = _pair(2)
+    gate = threading.Event()
+    started = threading.Event()
+    real = api.plan_spgemm
+
+    def slow_plan(*args, **kw):
+        started.set()
+        gate.wait(30)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(api, "plan_spgemm", slow_plan)
+    owner = threading.Thread(target=lambda: cached_plan(a, b, "expand"),
+                             daemon=True)
+    owner.start()
+    assert started.wait(10)
+    with pytest.raises(PlanBuildTimeout):
+        cached_plan(a, b, "expand", build_timeout=0.05)
+    assert plan_cache_info()["wait_timeouts"] == 1
+    gate.set()
+    owner.join(30)
+    # the owner's build still landed; a fresh call hits the cache
+    assert cached_plan(a, b, "expand") is not None
+    assert plan_cache_info()["wait_timeouts"] == 1      # no new timeout
+
+
+# ---------------------------------------------------------------------------
+# backpressure policies (tentpole part 4)
+# ---------------------------------------------------------------------------
+
+
+def _pin_worker(builder):
+    """Occupy the single worker behind a gate; returns the gate."""
+    gate = threading.Event()
+    running = threading.Event()
+
+    def task():
+        running.set()
+        gate.wait(30)
+
+    builder.submit_task(task, tag="pin")
+    assert running.wait(10)
+    return gate
+
+
+def test_shed_by_key_age_evicts_oldest_queued():
+    with PlanBuilder(max_pending=2,
+                     backpressure="shed-by-key-age") as builder:
+        gate = _pin_worker(builder)
+        assert builder.submit_task(lambda: "old", tag="old") == "submitted"
+        # queue full: admitting "new" evicts "old", not the new arrival
+        assert builder.submit_task(lambda: "new", tag="new") == "submitted"
+        shed = [r for r in builder.poll()
+                if isinstance(r.error, BuildShed)]
+        assert [r.tag for r in shed] == ["old"]
+        assert builder.stats["shed"] == 1
+        gate.set()
+        assert builder.wait_idle(30)
+        done = {r.tag: r for r in builder.poll()}
+    assert done["new"].ok and done["new"].plan == "new"
+    assert done["pin"].ok
+
+
+def test_block_with_deadline_blocks_then_sheds():
+    with PlanBuilder(max_pending=1, backpressure="block-with-deadline",
+                     block_timeout=0.15) as builder:
+        gate = _pin_worker(builder)
+        t0 = time.monotonic()
+        assert builder.submit_task(lambda: "late", tag="late") == "shed"
+        waited = time.monotonic() - t0
+        assert waited >= 0.1            # actually blocked for the window
+        # once capacity frees mid-wait, the submit goes through instead
+        threading.Timer(0.03, gate.set).start()
+        assert builder.submit_task(lambda: "ok", tag="ok") == "submitted"
+        assert builder.wait_idle(30)
+
+
+def test_unknown_backpressure_policy_rejected():
+    with pytest.raises(ValueError, match="backpressure"):
+        PlanBuilder(backpressure="drop-everything")
+
+
+# ---------------------------------------------------------------------------
+# satellites: listener errors, idempotent/drain shutdown
+# ---------------------------------------------------------------------------
+
+
+def test_listener_error_counted_not_propagated():
+    """One raising eviction listener must not starve the others or leak
+    into the resizing caller."""
+    for i in range(4):
+        cached_plan(*_pair(10 + i), "expand")   # host plans to evict
+    seen = []
+
+    def bad(keys, reason):
+        raise RuntimeError("boom")
+
+    def good(keys, reason):
+        seen.append((tuple(keys), reason))
+
+    api.register_eviction_listener(bad)
+    api.register_eviction_listener(good)
+    try:
+        api.plan_cache_resize(2)        # shrink: evicts, notifies
+    finally:
+        api.unregister_eviction_listener(bad)
+        api.unregister_eviction_listener(good)
+        api.plan_cache_resize(64)
+    assert seen and seen[0][1] == "resize"      # good listener still fired
+    assert plan_cache_info()["listener_errors"] == 1
+
+
+def test_shutdown_is_idempotent():
+    builder = PlanBuilder()
+    builder.submit_task(lambda: "x")
+    builder.shutdown()
+    builder.shutdown()                  # second call: no-op, no error
+    builder.shutdown(drain=True)        # and in either flavor
+    assert builder.pending() == 0
+
+
+def test_shutdown_drain_finishes_queued_work():
+    done = []
+    builder = PlanBuilder()
+    gate = _pin_worker(builder)
+    builder.submit_task(lambda: done.append("a"), tag="a")
+    builder.submit_task(lambda: done.append("b"), tag="b")
+    threading.Timer(0.05, gate.set).start()
+    builder.shutdown(drain=True)
+    assert done == ["a", "b"]
+    assert builder.stats["cancelled"] == 0
+    with pytest.raises(RuntimeError, match="shut down"):
+        builder.submit_task(lambda: None)
+
+
+def test_default_shutdown_cancels_queued_work():
+    builder = PlanBuilder()
+    gate = _pin_worker(builder)
+    builder.submit_task(lambda: "queued", tag="queued")
+    builder.shutdown(wait=False)        # non-drain: queued task cancelled
+    gate.set()
+    for _ in range(100):
+        if builder.stats["cancelled"]:
+            break
+        time.sleep(0.01)
+    assert builder.stats["cancelled"] == 1
+    cancelled = [r for r in builder.poll()
+                 if r.error is not None and r.tag == "queued"]
+    assert len(cancelled) == 1
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker (tentpole part 3)
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_degrade_pin_recover_cycle():
+    t = [0.0]
+    br = CircuitBreaker(degrade_after=1, pin_after=3, cooldown=5.0,
+                        cooldown_factor=2.0, clock=lambda: t[0])
+    assert br.health is Health.HEALTHY
+    assert br.allow_attempt()
+    br.record_failure()
+    assert br.health is Health.DEGRADED     # degraded, still attempting
+    assert br.allow_attempt()
+    br.record_failure()
+    br.record_failure()
+    assert br.health is Health.FALLBACK_PINNED
+    assert not br.allow_attempt()           # cooldown running
+    t[0] = 5.1
+    assert br.allow_attempt()               # the half-open probe
+    assert not br.allow_attempt()           # only one probe at a time
+    br.record_failure()                     # probe failed: re-pin, back off
+    assert br.health is Health.FALLBACK_PINNED
+    t[0] = 10.3                             # one base cooldown later: still
+    assert not br.allow_attempt()           # pinned (cooldown doubled)
+    t[0] = 15.3
+    assert br.allow_attempt()
+    br.record_success()                     # clean probe: full reset
+    assert br.health is Health.HEALTHY
+    assert br.info()["cooldown"] == 5.0     # back to base
+    assert br.info()["trips"] == 2
+
+
+def test_breaker_probe_cancelled_rearms():
+    t = [0.0]
+    br = CircuitBreaker(pin_after=1, cooldown=1.0, clock=lambda: t[0])
+    br.record_failure()
+    assert br.health is Health.FALLBACK_PINNED
+    t[0] = 1.5
+    assert br.allow_attempt()
+    br.probe_cancelled()                    # probe shed before running
+    assert br.allow_attempt()               # immediately re-armed
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: serving under injected warm failures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sparse_model():
+    cfg = smoke(ARCHS["qwen2-0.5b"])
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    sparse_params, overlay = sparsify_ffn_params(cfg, params,
+                                                 keep_density=0.5)
+    return cfg, sparse_params, overlay
+
+
+def test_engine_degrades_pins_and_recovers(sparse_model):
+    """Acceptance: under injected warm-compile failures every tick
+    completes, the breaker walks HEALTHY -> DEGRADED -> FALLBACK_PINNED,
+    a half-open probe recovers to jit ticks, greedy output is identical
+    to a fault-free run, and no builder worker is lost."""
+    cfg, sparse_params, overlay = sparse_model
+    t = [0.0]
+    br = CircuitBreaker(degrade_after=1, pin_after=2, cooldown=5.0,
+                        clock=lambda: t[0])
+    prompt, new = [1, 2, 3], 8
+    with faults.inject(faults.FaultRule("warm_compile", "fail", every=1,
+                                        max_fires=2, match="serve-warm")):
+        with PlanBuilder() as builder:
+            eng = ServeEngine(cfg, sparse_params, max_batch=2,
+                              cache_len=32, sparse_ffn=overlay,
+                              plan_builder=builder, breaker=br)
+            assert builder.wait_idle(60)    # init warm: injected failure 1
+            assert br.health is Health.DEGRADED
+            rid = eng.submit(prompt, max_new_tokens=new)
+
+            assert eng.step()               # resubmits: injected failure 2
+            assert builder.wait_idle(60)
+            assert br.health is Health.FALLBACK_PINNED
+            assert eng.tick_stats["warm_failures"] == 2
+
+            pinned_ticks = 0
+            while not eng.sparse_ready() and (eng.queue or any(eng.slots)):
+                assert eng.step()           # every tick completes, pinned
+                pinned_ticks += 1
+                assert builder.wait_idle(60)
+                if pinned_ticks == 3:
+                    t[0] = 5.1              # cooldown elapses mid-request:
+                    # next tick launches the half-open probe (fault budget
+                    # exhausted, so it compiles cleanly and promotes)
+            assert eng.wait_sparse(120)
+            assert br.health is Health.HEALTHY
+            done = eng.run_to_completion()
+            assert eng.tick_stats["jit_ticks"] > 0
+            assert eng.tick_stats["fallback_ticks"] >= 3
+            assert eng.tick_stats["health"] == "healthy"
+            assert builder.info()["workers"] == 1   # no worker lost
+    chaos_gen = done[rid].generated
+    assert len(chaos_gen) == new
+
+    # fault-free reference: same request, jit from tick 0 — greedy decode
+    # must be bit-identical across every health transition
+    ref = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                      sparse_ffn=overlay)
+    rid2 = ref.submit(prompt, max_new_tokens=new)
+    assert ref.run_to_completion()[rid2].generated == chaos_gen
+
+
+def test_engine_close_detaches_from_shared_builder(sparse_model):
+    """close() stops an engine's warms without touching the shared
+    builder: a late warm completion for a closed engine is discarded."""
+    cfg, sparse_params, overlay = sparse_model
+    gate = threading.Event()
+    with PlanBuilder() as builder:
+        builder.submit_task(gate.wait, tag="gate")
+        eng = ServeEngine(cfg, sparse_params, max_batch=1, cache_len=32,
+                          sparse_ffn=overlay, plan_builder=builder)
+        eng.close()
+        eng.close()                     # idempotent
+        gate.set()
+        assert builder.wait_idle(120)
+        assert not eng.sparse_ready()   # late warm was discarded
+        # the builder itself is alive and serving others
+        builder.submit_task(lambda: "alive", tag="alive")
+        assert builder.wait_idle(30)
+        assert any(r.tag == "alive" and r.ok for r in builder.poll())
+
+
+def test_bench_env_header_records_fault_plan():
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    try:
+        import _util
+    finally:
+        sys.path.pop(0)
+    assert "fault_plan" not in _util.env_info()
+    with faults.inject(faults.FaultRule("plan_spgemm", "fail",
+                                        rate=0.25), seed=11):
+        hdr = _util.env_info()
+    assert hdr["fault_plan"]["seed"] == 11
+    assert hdr["fault_plan"]["rules"][0]["site"] == "plan_spgemm"
+    assert "fault_plan" not in _util.env_info()     # clean again after

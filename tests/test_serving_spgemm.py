@@ -232,3 +232,63 @@ def test_sampled_decode_equivalent_across_promotion(sparse_model):
                         sparse_ffn=overlay, seed=124)
     rid3 = other.submit([1, 2, 3], max_new_tokens=8, temperature=0.7)
     assert other.run_to_completion()[rid3].generated != mixed_gen
+
+
+# ---------------------------------------------------------------------------
+# many engines, one shared builder (ISSUE 9 satellite / ROADMAP item 1)
+# ---------------------------------------------------------------------------
+
+
+def test_many_engines_share_one_builder(small_model, sparse_model):
+    """Concurrent engines on one PlanBuilder: warms never cross-deliver
+    (an engine only becomes ready via its own warm), each engine's greedy
+    output matches a solo reference, and closing one engine leaves the
+    shared builder serving the others."""
+    cfg, sparse_params, overlay = sparse_model
+    _, params = small_model
+    sparse_params3, overlay3 = sparsify_ffn_params(cfg, params,
+                                                   keep_density=0.25)
+    prompts = {1: [1, 2, 3], 2: [4, 5], 3: [6, 7, 8]}
+    with PlanBuilder() as builder:
+        eng1 = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                           sparse_ffn=overlay, plan_builder=builder)
+        assert eng1.wait_sparse(120)
+
+        # eng2 shares eng1's overlay (same plans, deduped through the
+        # LRU) but must NOT inherit eng1's readiness: gate the builder so
+        # eng2's own warm cannot have run yet
+        gate = threading.Event()
+        builder.submit_task(gate.wait, tag="gate2")
+        eng2 = ServeEngine(cfg, sparse_params, max_batch=2, cache_len=32,
+                           sparse_ffn=overlay, plan_builder=builder)
+        assert eng1.sparse_ready() and not eng2.sparse_ready()
+        gate.set()
+
+        eng3 = ServeEngine(cfg, sparse_params3, max_batch=2, cache_len=32,
+                           sparse_ffn=overlay3, plan_builder=builder)
+        engines = {1: eng1, 2: eng2, 3: eng3}
+        rids = {i: e.submit(prompts[i], max_new_tokens=5)
+                for i, e in engines.items()}
+        for _ in range(200):        # interleaved ticks across all engines
+            if not any(e.queue or any(e.slots) for e in engines.values()):
+                break
+            for e in engines.values():
+                if e.queue or any(e.slots):
+                    e.step()
+        gens = {i: e.finished[rids[i]].generated
+                for i, e in engines.items()}
+
+        # closing one engine must not kill the shared builder
+        eng1.close()
+        builder.submit_task(lambda: "alive", tag="alive")
+        assert builder.wait_idle(120)
+        assert any(r.tag == "alive" and r.ok for r in builder.poll())
+
+    for i, (model, ovl) in {1: (sparse_params, overlay),
+                            2: (sparse_params, overlay),
+                            3: (sparse_params3, overlay3)}.items():
+        ref = ServeEngine(cfg, model, max_batch=2, cache_len=32,
+                          sparse_ffn=ovl)
+        rid = ref.submit(prompts[i], max_new_tokens=5)
+        assert ref.run_to_completion()[rid].generated == gens[i], i
+        assert len(gens[i]) == 5
