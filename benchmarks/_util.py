@@ -49,6 +49,22 @@ def env_info() -> dict:
         # a result measured under injected faults must never be mistaken
         # for a clean baseline (DESIGN.md §14)
         out["fault_plan"] = fp.describe()
+    # cost-constant provenance (DESIGN.md §15): which profile — a measured
+    # machine fit or the shipped defaults — auto's picks were ranked under.
+    # A BENCH number is only reproducible together with its calibration.
+    from repro.core import profile
+
+    prov = profile.profile_info()
+    out["cost_profile"] = {
+        "source": prov["source"],
+        "fingerprint_key": prov["fingerprint_key"],
+        "created_at": prov["created_at"],
+        "age_seconds": prov["age_seconds"],
+        "fitted": prov["fitted"],
+        "tuning": prov["tuning"],
+        "default_auto_uses": prov["default_auto_uses"],
+        "stale_discards": prov["stale_discards"],
+    }
     return out
 
 

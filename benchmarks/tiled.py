@@ -22,6 +22,16 @@ PASS criterion (ISSUE 3): the auto plan picks >= 2 distinct per-tile
 methods on the mixed-density matrix AND matches or beats the best fixed
 candidate method end-to-end (<= 1.05x its numeric-phase time).
 
+Cost-profile gates (ISSUE 10, DESIGN.md §15): the run consumes the machine
+profile persisted by ``benchmarks/calibrate_profile.py`` (point
+``REPRO_PROFILE_DIR`` at it — CI calibrates first, then runs this).  When
+a *measured* profile is active, two further criteria apply: auto under the
+measured constants must be no slower than auto re-planned on the shipped
+defaults (<= 1.15x, noise slack), and the Spearman rank correlation
+between the model's predicted per-(tile, method) costs and fresh
+measurements of those same tiles must be >= 0.8 — the model only has to
+*rank* candidates, so ranking is what the gate checks.
+
     PYTHONPATH=src python benchmarks/tiled.py [--smoke] [--out PATH]
     PYTHONPATH=src python benchmarks/tiled.py --calibrate   # cost constants
 """
@@ -37,11 +47,17 @@ import numpy as np
 
 from _util import median_time, write_report
 import repro.core.fast as fast
-from repro.core import plan_spgemm, plan_spgemm_tiled
+from repro.core import plan_spgemm, plan_spgemm_tiled, profile
+from repro.core.cost import estimate_cost
 from repro.sparse.format import CSC, csc_from_dense, csc_to_dense
+from repro.sparse.partition import csc_col_slice, csc_row_slice
+from repro.sparse.stats import tile_stats
 
 FIXED_METHODS = ("spa", "expand", "jax")   # == the host auto candidate set
 REQUIRED_RATIO = 1.05                      # auto <= 1.05x best fixed
+REQUIRED_PROFILE_RATIO = 1.15              # auto(measured) <= 1.15x auto(default)
+REQUIRED_SPEARMAN = 0.8                    # predicted-vs-measured ranking
+MAX_RANK_TILES = 8                         # tiles probed by the ranking gate
 
 
 def mixed_density_pair(m: int, n_sparse: int, dense_a: int, dense_b: int,
@@ -65,6 +81,47 @@ def mixed_density_pair(m: int, n_sparse: int, dense_a: int, dense_b: int,
         rows = dense_a + rng.integers(k - dense_a, size=2)
         bd[rows, j] = rng.uniform(0.5, 1.5, size=2)
     return csc_from_dense(ad), csc_from_dense(bd)
+
+
+def rank_check(a: CSC, b: CSC, auto_plan, constants, reps: int) -> dict:
+    """Predicted-vs-measured *ranking* across (tile, method) candidates.
+
+    Re-slices up to ``MAX_RANK_TILES`` tiles of the auto plan's grid, asks
+    the cost model for each host candidate's predicted cost on that tile,
+    then times the same (tile, method) executions for real (plan held,
+    numeric phase only).  Returns the Spearman rank correlation over all
+    probe points — the direct cross-check that the profile's constants
+    order candidates the way the machine does.
+    """
+    kb, nb = auto_plan.k_bounds, auto_plan.n_bounds
+    coords = [(ki, ni) for ni in range(len(nb) - 1)
+              for ki in range(len(kb) - 1)]
+    stride = max(len(coords) // MAX_RANK_TILES, 1)
+    pred, meas, points = [], [], []
+    for ki, ni in coords[::stride][:MAX_RANK_TILES]:
+        a_tile, _ = csc_col_slice(a, int(kb[ki]), int(kb[ki + 1]))
+        b_col, _ = csc_col_slice(b, int(nb[ni]), int(nb[ni + 1]))
+        b_tile, _ = csc_row_slice(b_col, int(kb[ki]), int(kb[ki + 1]))
+        if a_tile.nnz == 0 or b_tile.nnz == 0:
+            continue
+        st = tile_stats(a_tile, b_tile)
+        if st.flops == 0:
+            continue
+        for method in FIXED_METHODS:
+            plan = (plan_spgemm(a_tile, b_tile, "expand", backend="jax")
+                    if method == "jax"
+                    else plan_spgemm(a_tile, b_tile, method))
+            plan.execute(a_tile, b_tile)   # warmup: lazy plan state
+            t = median_time(
+                lambda: np.asarray(plan.execute(a_tile, b_tile).values),
+                reps)
+            pred.append(estimate_cost(st, method, constants=constants))
+            meas.append(t)
+            points.append({"tile": [ki, ni], "method": method,
+                           "flops": int(st.flops),
+                           "predicted_s": pred[-1], "measured_ms": t * 1e3})
+    rc = profile.rank_correlation(pred, meas) if len(pred) >= 2 else None
+    return {"spearman": rc, "n_points": len(pred), "points": points}
 
 
 def main():
@@ -92,7 +149,10 @@ def main():
         # auto-vs-fixed margin at the old 128-wide size was ~1.0x +- noise)
         args.m, args.n_sparse = 192, 1008
         args.dense_a = args.dense_b = args.per_dense = 24
-        args.tile_n, args.reps = 64, 3
+        # 7 sweeps: the per-method minima gate three ratio criteria now
+        # (fixed, auto, auto-on-defaults) and 3-sample times flap on a
+        # noisy container; a sweep is ~30ms so this stays CI-cheap
+        args.tile_n, args.reps = 64, 7
 
     guard = args.stream_guard
     if guard is None:
@@ -101,12 +161,15 @@ def main():
 
     a, b = mixed_density_pair(args.m, args.n_sparse, args.dense_a,
                               args.dense_b, args.per_dense)
+    prof = profile.current_profile()
     print(f"mixed-density workload: A {a.shape} nnz={a.nnz}, "
           f"B {b.shape} nnz={b.nnz}, reps={args.reps}, "
-          f"stream guard={guard} products\n")
+          f"stream guard={guard} products")
+    print(f"cost profile: {prof.tag}"
+          + (f" (fitted {len(prof.fitted)} fields)"
+             if prof.source == "measured" else " (uncalibrated)") + "\n")
 
-    results = {}
-    print(f"{'method':12s} {'numeric/call':>13s}")
+    fixed_plans = {}
     for method in FIXED_METHODS:
         # "jax" = the device stream (an expand-method jax-backend plan);
         # with the workload-scaled guard the full-matrix stream is guarded,
@@ -114,12 +177,7 @@ def main():
         plan = (plan_spgemm(a, b, "expand", backend="jax")
                 if method == "jax" else plan_spgemm(a, b, method))
         plan.execute(a, b)   # warmup: lazy one-time plan state built here
-        # np.asarray synchronizes device results (jax dispatch is async;
-        # an unguarded jax row would otherwise time only the dispatch)
-        tt = median_time(
-            lambda: np.asarray(plan.execute(a, b).values), args.reps)
-        results[method] = {"t_exec_ms": tt * 1e3}
-        print(f"{method:12s} {tt*1e3:12.2f}ms")
+        fixed_plans[method] = plan
 
     tile = (None, args.tile_n)
     t_build = median_time(
@@ -127,7 +185,46 @@ def main():
     auto_plan = plan_spgemm_tiled(a, b, tile=tile)
     stats = {}
     c_auto = auto_plan.execute(a, b, stats=stats)
-    t_auto = median_time(lambda: auto_plan.execute(a, b), args.reps)
+
+    # interleaved sweeps: one rep of every competitor per pass, per-method
+    # minimum across passes — a container load burst then degrades one
+    # pass of everyone instead of one method's entire sample, which is
+    # what made the ratio gates flap when each method was timed in a block
+    sweeps: dict = {m: [] for m in (*FIXED_METHODS, "auto")}
+
+    def _sweep():
+        for method, plan in fixed_plans.items():
+            # np.asarray synchronizes device results (jax dispatch is
+            # async; an unguarded jax row would otherwise time only the
+            # dispatch)
+            sweeps[method].append(median_time(
+                lambda: np.asarray(plan.execute(a, b).values), 1))
+        sweeps["auto"].append(median_time(
+            lambda: auto_plan.execute(a, b), 1))
+
+    def _ratio():
+        best = min(FIXED_METHODS, key=lambda m: min(sweeps[m]))
+        return min(sweeps["auto"]) / min(sweeps[best])
+
+    for _ in range(args.reps):
+        _sweep()
+    # near-threshold refinement: when the decision sits within ~10% of the
+    # gate, keep sweeping (bounded) — minima are monotone, so additional
+    # passes only converge both sides toward their true times instead of
+    # letting one unlucky burst decide a marginal ratio
+    extra = 0
+    while abs(_ratio() - REQUIRED_RATIO) < 0.1 * REQUIRED_RATIO \
+            and extra < 3 * args.reps:
+        _sweep()
+        extra += 1
+
+    results = {}
+    print(f"{'method':12s} {'numeric/call':>13s}")
+    for method in FIXED_METHODS:
+        tt = min(sweeps[method])
+        results[method] = {"t_exec_ms": tt * 1e3}
+        print(f"{method:12s} {tt*1e3:12.2f}ms")
+    t_auto = min(sweeps["auto"])
     results["auto"] = {
         "t_exec_ms": t_auto * 1e3,
         "t_plan_ms": t_build * 1e3,
@@ -137,6 +234,41 @@ def main():
     }
     print(f"{'auto':12s} {t_auto*1e3:12.2f}ms   "
           f"grid={auto_plan.grid} methods={stats['methods']}")
+
+    # cost-profile gates (ISSUE 10): only meaningful against a measured
+    # calibration of *this* machine — on defaults they are recorded
+    # (gated=False) but do not decide the PASS
+    measured = prof.source == "measured"
+    t_default = t_auto_vs = None
+    if measured:
+        # re-plan the same workload with the shipped default constants:
+        # the measured profile must not make auto slower than it was
+        profile.set_profile(profile.default_profile())
+        try:
+            default_plan = plan_spgemm_tiled(a, b, tile=tile, cache=False)
+        finally:
+            profile.set_profile(prof)
+        if default_plan.methods == auto_plan.methods:
+            # identical per-tile picks -> the two plans are the same
+            # execution; timing them separately would only measure noise
+            t_default = t_auto_vs = t_auto
+        else:
+            # picks differ: time the plans interleaved, so a load burst
+            # on the container hits both sides of the ratio equally
+            default_plan.execute(a, b)
+            sa, sd = [], []
+            for _ in range(args.reps):
+                sa.append(median_time(lambda: auto_plan.execute(a, b), 1))
+                sd.append(median_time(lambda: default_plan.execute(a, b), 1))
+            t_auto_vs, t_default = min(sa), min(sd)
+        print(f"{'auto@default':12s} {t_default*1e3:12.2f}ms   "
+              f"methods={sorted(set(default_plan.methods.values()))}")
+
+    rank = rank_check(a, b, auto_plan, prof.constants, args.reps)
+    rc = rank["spearman"]
+    print(f"model ranking: Spearman(pred, meas) = "
+          f"{'n/a' if rc is None else format(rc, '.3f')} "
+          f"over {rank['n_points']} (tile, method) points")
 
     # correctness gate before the timing is trusted.  "jax" tiles compute
     # in f32 on the device (DESIGN.md §10), so a grid that selected any is
@@ -149,7 +281,14 @@ def main():
     best_fixed = min(FIXED_METHODS, key=lambda m: results[m]["t_exec_ms"])
     ratio = results["auto"]["t_exec_ms"] / results[best_fixed]["t_exec_ms"]
     distinct = len(stats["methods"])
-    ok = ok_value and distinct >= 2 and ratio <= REQUIRED_RATIO
+    profile_ratio = t_auto_vs / t_default if t_default else None
+    ok_profile = (profile_ratio <= REQUIRED_PROFILE_RATIO
+                  if measured else True)
+    ok_rank = ((rank["spearman"] is not None
+                and rank["spearman"] >= REQUIRED_SPEARMAN)
+               if measured else True)
+    ok = (ok_value and distinct >= 2 and ratio <= REQUIRED_RATIO
+          and ok_profile and ok_rank)
     report = {
         "bench": "tiled",
         "config": {"m": args.m, "n_sparse": args.n_sparse,
@@ -164,13 +303,25 @@ def main():
             "required_ratio": REQUIRED_RATIO,
             "distinct_methods": distinct,
             "values_match": ok_value,
+            # cost-profile gates (ISSUE 10) — gated only on a measured fit
+            "profile_source": prof.tag,
+            "profile_gated": measured,
+            "auto_default_ms": (t_default * 1e3 if t_default else None),
+            "auto_measured_vs_default": profile_ratio,
+            "required_profile_ratio": REQUIRED_PROFILE_RATIO,
+            "rank_spearman": rank["spearman"],
+            "rank_points": rank["n_points"],
+            "required_spearman": REQUIRED_SPEARMAN,
             "passed": ok,
         },
+        "rank_points": rank["points"],
     }
     write_report(args.out, report)
     print(f"criterion: auto {ratio:.2f}x of best fixed ({best_fixed}), "
-          f"{distinct} distinct per-tile methods "
-          f"-> {'PASS' if ok else 'FAIL'}")
+          f"{distinct} distinct per-tile methods"
+          + (f", {profile_ratio:.2f}x of auto-on-defaults, "
+             f"Spearman {rank['spearman']:.2f}" if measured else "")
+          + f" -> {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 
 

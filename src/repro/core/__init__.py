@@ -69,6 +69,16 @@ from repro.core.api import (
     spgemm_batched,
     unregister_eviction_listener,
 )
+from repro.core.profile import (
+    MachineProfile,
+    calibrate_profile,
+    current_profile,
+    fingerprint_key,
+    load_profile,
+    machine_fingerprint,
+    rank_correlation,
+    save_profile,
+)
 from repro.core.faults import FaultPlan, FaultRule, InjectedFault
 from repro.core.plan_builder import (
     BuildCancelled,
@@ -151,4 +161,12 @@ __all__ = [
     "estimate_cost",
     "estimate_mesh_cost",
     "should_distribute",
+    "MachineProfile",
+    "calibrate_profile",
+    "current_profile",
+    "fingerprint_key",
+    "load_profile",
+    "machine_fingerprint",
+    "rank_correlation",
+    "save_profile",
 ]

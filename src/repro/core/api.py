@@ -199,6 +199,13 @@ def plan_cache_info() -> dict:
         if b is not None:
             builders.append(b.info())
     out["builders"] = builders
+    # cost-profile provenance + telemetry (DESIGN.md §15): which constants
+    # ("measured" fit vs "default") the auto plans in this cache were
+    # ranked under, how stale the calibration is, and how often auto ran
+    # on uncalibrated defaults for device-resident work
+    from repro.core import profile
+
+    out["profile"] = profile.profile_info()
     return out
 
 
@@ -440,10 +447,16 @@ def _cached_tiled_plan(a: CSC, b: CSC, backend: str, tile,
     # candidates= equal to the backend default hits the same entry
     cands = AUTO_CANDIDATES[backend] if candidates is None \
         else tuple(candidates)
+    # the cost-profile tag keys the entry too (mirrors
+    # TiledSpgemmPlan.cache_key): per-tile picks ranked under a measured
+    # calibration must not alias picks ranked under defaults
+    from repro.core import profile
+
     key = (pattern_fingerprint(a), pattern_fingerprint(b), "auto", backend,
            spec, cands,
            _fast.STREAM_MAX_PRODUCTS
-           if backends.get_backend(backend).carries_stream else None)
+           if backends.get_backend(backend).carries_stream else None,
+           profile.current_profile().tag)
     return _build_once(
         key,
         lambda: plan_spgemm_tiled(a, b, backend=backend, tile=tile,
@@ -457,10 +470,15 @@ def _mesh_plan_key(a: CSC, b: CSC, shards, tile,
     # per-shard guards) are different placements and must not alias
     import jax
 
+    from repro.core import profile
+
     n_shards = len(jax.devices()) if shards is None else int(shards)
     limit = (_fast.STREAM_MAX_PRODUCTS if stream_limit is None
              else int(stream_limit))
-    params = (("shard_limit", limit), ("shards", n_shards),
+    # the profile tag rides along for the same reason as in the tiled key:
+    # the LPT shard placement is ranked on the profile's constants
+    params = (("profile", profile.current_profile().tag),
+              ("shard_limit", limit), ("shards", n_shards),
               ("tile", normalize_tile_spec(tile)))
     return (pattern_fingerprint(a), pattern_fingerprint(b), "expand",
             "mesh", params, limit)

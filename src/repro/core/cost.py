@@ -132,6 +132,27 @@ class CostConstants:
 DEFAULT_CONSTANTS = CostConstants()
 
 
+def _resolve_constants(constants: CostConstants | None) -> CostConstants:
+    """Explicit constants win; otherwise consult the machine profile
+    (measured fit for this fingerprint if one is persisted, else
+    ``DEFAULT_CONSTANTS`` — see ``core.profile``).  Lazy import: profile
+    depends on this module for :class:`CostConstants`."""
+    if constants is not None:
+        return constants
+    from repro.core import profile
+
+    return profile.current_constants()
+
+
+def _note_if_default(backend: str, candidates: tuple) -> None:
+    """Count/warn when auto ranks device engines on uncalibrated defaults
+    (satellite: the stale-constants trap)."""
+    from repro.core import profile
+
+    if profile.current_profile().source == "default":
+        profile.note_default_auto(backend, candidates)
+
+
 def _family(method: str) -> str:
     if method in ("spa", "expand", "esc", "jax", "fused"):
         return method
@@ -258,8 +279,12 @@ def estimate_cost(stats: TileStats, method: str, backend: str = "host",
     so it is directly comparable with the host engines it competes with in
     a mixed tile grid); Pallas estimates are relative work units.  Only
     compare estimates within one cost domain.
+
+    When ``constants`` is ``None`` the machine profile is consulted
+    (``core.profile``): the measured fit for this host/device fingerprint
+    if one is persisted, ``DEFAULT_CONSTANTS`` otherwise.
     """
-    c = constants or DEFAULT_CONSTANTS
+    c = _resolve_constants(constants)
     contract = backends.get_backend(backend)
     if contract.cost_domain == "relative":
         return _pallas_cost(stats, method, c)
@@ -278,9 +303,11 @@ def estimate_mesh_cost(stats: TileStats, n_shards: int,
     ``psum_scatter`` partial-C reduction, which moves ``(D-1)/D`` of the
     f32 slot axis (|C| estimated from the flops upper bound) through the
     interconnect.  Seconds domain — directly comparable with the host/jax
-    estimates of :func:`estimate_cost`.
+    estimates of :func:`estimate_cost`.  ``constants=None`` resolves
+    through the machine profile, so a measured ``psum_scatter`` ladder
+    (``benchmarks/calibrate_profile.py``) replaces the default comm terms.
     """
-    c = constants or DEFAULT_CONSTANTS
+    c = _resolve_constants(constants)
     d = max(int(n_shards), 1)
     flops = stats.flops
     per_shard = -(-flops // d)
@@ -309,7 +336,9 @@ def should_distribute(stats: TileStats, n_shards: int,
     """
     if int(n_shards) <= 1:
         return False
-    c = constants or DEFAULT_CONSTANTS
+    if constants is None:
+        _note_if_default("mesh", AUTO_CANDIDATES["mesh"])
+    c = _resolve_constants(constants)
     limit = (_fast.STREAM_MAX_PRODUCTS if shard_limit is None
              else int(shard_limit))
     if stats.flops > limit:
@@ -327,6 +356,9 @@ def choose_method(stats: TileStats, backend: str = "host",
         else tuple(candidates)
     if not cands:
         raise ValueError("empty candidate set")
+    if constants is None:
+        _note_if_default(backend, cands)
+        constants = _resolve_constants(None)
     best, best_cost = cands[0], None
     for m in cands:
         cost = estimate_cost(stats, m, backend, constants)

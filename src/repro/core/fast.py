@@ -41,7 +41,12 @@ from repro.sparse.format import CSC, _np, segment_reduce
 
 # plan-resident stream guard: ~20 bytes per product of retained index data.
 # Above this the plan keeps stream=None and executions rebuild transiently.
-STREAM_MAX_PRODUCTS = 8_000_000
+# DEFAULT_STREAM_MAX_PRODUCTS is the shipped fallback; the live knob below
+# is what the cost model and planner consult, and a calibrated machine
+# profile can retune it to this host's RAM via
+# ``core.profile.apply_tuning`` (DESIGN.md §15).
+DEFAULT_STREAM_MAX_PRODUCTS = 8_000_000
+STREAM_MAX_PRODUCTS = DEFAULT_STREAM_MAX_PRODUCTS
 
 # batched execution: streams up to this many products run the whole value
 # axis through one 2-D gather/reduce pass (amortizing per-call numpy

@@ -75,7 +75,11 @@ from repro.sparse.format import CSC
 # accumulates into is T wide.  Overridable for tests (segment-boundary
 # edge cases build plans under tiny blocks); views/functions memoized on a
 # plan record the block they were built with and rebuild on mismatch.
-FUSED_BLOCK = 128
+# DEFAULT_FUSED_BLOCK is the shipped fallback; a calibrated machine
+# profile can retune the live knob to this host's measured argmin via
+# ``core.profile.apply_tuning`` (DESIGN.md §15).
+DEFAULT_FUSED_BLOCK = 128
+FUSED_BLOCK = DEFAULT_FUSED_BLOCK
 
 
 @dataclasses.dataclass(frozen=True)

@@ -642,7 +642,7 @@ class TiledSpgemmPlan:
         own = dict(self.params)
         return (self.a.fingerprint, self.b.fingerprint, "auto",
                 self.backend, own["tile"], own["candidates"],
-                own["stream_guard"])
+                own["stream_guard"], own.get("profile", "default"))
 
     def execute(self, a_values, b_values, *, interpret: bool = True,
                 stats: dict | None = None, validate: str | None = None,
@@ -780,7 +780,17 @@ def plan_spgemm_tiled(
                 k=ki, n=ni, a_vals=(a_lo, a_hi), b_vals=b_lo + rel,
                 plan=child, engine=engine))
 
+    # the cost-constant provenance the per-tile choices were ranked under:
+    # a plan built on measured constants must never alias one built on
+    # defaults (or on an older calibration) in the plan LRU
+    if constants is None:
+        from repro.core import profile as _profile
+
+        profile_tag = _profile.current_profile().tag
+    else:
+        profile_tag = "explicit"
     params = (("candidates", cands),
+              ("profile", profile_tag),
               # stream-carrying backends only (all three today): the guard
               # steers host/jax per-tile method choices and bounds every
               # child plan's lazy stream build, fused replays included

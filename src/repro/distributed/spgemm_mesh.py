@@ -334,7 +334,16 @@ def plan_spgemm_mesh(
              else int(shard_limit))
     if limit < 1:
         raise ValueError(f"shard_limit must be >= 1, got {limit}")
-    c = constants or DEFAULT_CONSTANTS
+    # constants=None resolves through the machine profile (core.profile):
+    # a measured fit re-ranks the LPT placement below, and its provenance
+    # tag becomes part of the plan params / cache key
+    if constants is None:
+        from repro.core import profile as _profile
+
+        prof = _profile.current_profile()
+        c, profile_tag = prof.constants, prof.tag
+    else:
+        c, profile_tag = constants, "explicit"
 
     spec = normalize_tile_spec(tile)
     k_width, n_width = spec
@@ -397,7 +406,8 @@ def plan_spgemm_mesh(
             f"above shard_limit={limit} (total {sum(tile_flops)} products "
             f"over {n_shards} shards); raise shards= or shard_limit=")
 
-    params = (("shard_limit", limit), ("shards", n_shards), ("tile", spec))
+    params = (("profile", profile_tag), ("shard_limit", limit),
+              ("shards", n_shards), ("tile", spec))
     return ShardedSpgemmPlan(
         Pattern.of(a), Pattern.of(b),
         np.asarray(k_bounds, np.int64), np.asarray(n_bounds, np.int64),

@@ -72,14 +72,27 @@ def nnz_balanced_col_bounds(m: CSC, n_blocks: int) -> np.ndarray:
     return np.unique(np.concatenate(([0], cuts, [n]))).astype(np.int64)
 
 
-def auto_tile_grid(a: CSC, b: CSC, *, n_target: int = DEFAULT_TILE_NNZ,
-                   k_target: int = DEFAULT_KSPLIT_NNZ) -> tuple:
+def auto_tile_grid(a: CSC, b: CSC, *, n_target: int | None = None,
+                   k_target: int | None = None) -> tuple:
     """(k_blocks, n_blocks) sized from operand nnz (DESIGN.md §8).
 
     Small operands get a 1x1 grid (tiling then degenerates to the untiled
     path, bit for bit); the n axis splits once B carries more than
     ``n_target`` stored values, the k axis only for much larger A.
+
+    Targets left as ``None`` resolve through the machine profile's tuned
+    ``tile_n_target``/``tile_k_target`` knobs when a calibrated profile is
+    loaded (``core.profile``, DESIGN.md §15), falling back to the module
+    defaults above.
     """
+    if n_target is None or k_target is None:
+        from repro.core import profile
+
+        tuning = profile.current_profile().tuning
+        if n_target is None:
+            n_target = int(tuning.get("tile_n_target", DEFAULT_TILE_NNZ))
+        if k_target is None:
+            k_target = int(tuning.get("tile_k_target", DEFAULT_KSPLIT_NNZ))
     k_blocks = max(1, -(-a.nnz // k_target)) if a.n_cols else 1
     n_blocks = max(1, -(-b.nnz // n_target)) if b.n_cols else 1
     return min(k_blocks, max(a.n_cols, 1)), min(n_blocks, max(b.n_cols, 1))

@@ -198,7 +198,12 @@ def test_plan_cache_hit_miss_and_eviction(monkeypatch):
     spgemm(a, a, method="spars-40/40")
     assert plan_cache_info()["size"] <= 2
     plan_cache_clear()
-    assert plan_cache_info() == {
+    cleared = plan_cache_info()
+    # the cost-profile provenance block is machine-dependent (fingerprint,
+    # age) and survives a cache clear by design — covered in
+    # test_profile.py, compared loosely here
+    assert cleared.pop("profile")["source"] in ("default", "measured")
+    assert cleared == {
         "hits": 0, "misses": 0, "evictions": 0, "size": 0, "max_size": 2,
         "hit_rate": 0.0, "in_flight": 0, "stream_bytes": 0,
         "device_stream_bytes": 0, "fused_stream_bytes": 0,
